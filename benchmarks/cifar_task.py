@@ -1,0 +1,49 @@
+"""Paper's second task (CIFAR-10 analogue): SD-FEEL vs HierFAVG on the
+6-conv CNN with the CIFAR latency constants (Figs. 4b/5b setting).
+
+Heavier than the MNIST-analogue benchmarks — included in the default run
+only under REPRO_BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ClusterSpec, CIFAR_LATENCY, HierFAVGTrainer, SDFEELConfig, SDFEELSimulator, ring
+from repro.data import FederatedDataset, cifar_like, dirichlet_partition
+from repro.models import CifarCNN
+
+from .common import emit, N_CLIENTS, N_CLUSTERS, BATCH
+
+
+def main():
+    data = cifar_like(2000, seed=8)
+    train, test = data.split(0.85)
+    parts = dirichlet_partition(train.y, N_CLIENTS, beta=0.5, seed=8)
+    ds = FederatedDataset(train, parts)
+    eval_batch = {"x": test.x[:256], "y": test.y[:256]}
+    iters = 30
+    rng = np.random.default_rng(8)
+    batch_fn = lambda k: ds.stacked_batch(BATCH, rng)
+
+    spec = ClusterSpec(ds.num_clients,
+                       tuple(i * N_CLUSTERS // ds.num_clients for i in range(ds.num_clients)),
+                       ds.data_sizes())
+    cfg = SDFEELConfig(clusters=spec, topology=ring(N_CLUSTERS), tau1=2, tau2=1,
+                       alpha=2, learning_rate=0.01)
+    sd = SDFEELSimulator(CifarCNN(), cfg, latency=CIFAR_LATENCY, seed=8)
+    h_sd = sd.run(iters, batch_fn, eval_batch, eval_every=iters)
+    emit("cifar", "sdfeel", iters, "final_loss", h_sd.loss[-1])
+    emit("cifar", "sdfeel", iters, "total_time", h_sd.wallclock[-1])
+
+    hier = HierFAVGTrainer(CifarCNN(), ClusterSpec.uniform(ds.num_clients, N_CLUSTERS),
+                           tau1=2, tau2=2, lr=0.01, latency=CIFAR_LATENCY)
+    h_h = hier.run(iters, batch_fn, eval_batch, eval_every=iters)
+    emit("cifar", "hierfavg", iters, "final_loss", h_h.loss[-1])
+    emit("cifar", "hierfavg", iters, "total_time", h_h.wallclock[-1])
+    assert h_sd.wallclock[-1] < h_h.wallclock[-1]  # inter-server < cloud links
+    return {"sdfeel_loss": h_sd.loss[-1], "hier_loss": h_h.loss[-1],
+            "sdfeel_time": h_sd.wallclock[-1], "hier_time": h_h.wallclock[-1]}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Shared benchmark machinery for the paper-figure reproductions.
+
+The paper's MNIST/CIFAR-10 are replaced by shape-compatible synthetic tasks
+(see DESIGN.md §2); every benchmark reports CSV rows
+``figure,series,x,metric,value`` appended to ``results/benchmarks.csv``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    ClusterSpec, MNIST_LATENCY, SDFEELConfig, SDFEELSimulator,
+)
+from repro.core.topology import TOPOLOGIES
+from repro.data import FederatedDataset, mnist_like, skewed_label_partition, dirichlet_partition
+from repro.models import MnistCNN
+
+RESULTS = os.environ.get("REPRO_RESULTS", os.path.join(os.path.dirname(__file__), "..", "results"))
+CSV_PATH = os.path.join(RESULTS, "benchmarks.csv")
+
+# paper: 50 clients / 10 edge servers; scaled to 20/4 for CPU budget unless
+# REPRO_BENCH_FULL=1.
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+N_CLIENTS = 50 if FULL else 20
+N_CLUSTERS = 10 if FULL else 4
+ITERS = 400 if FULL else 80
+BATCH = 10
+EVAL_N = 512
+
+
+def ensure_results():
+    os.makedirs(RESULTS, exist_ok=True)
+    if not os.path.exists(CSV_PATH):
+        with open(CSV_PATH, "w") as f:
+            f.write("figure,series,x,metric,value\n")
+
+
+def emit(figure: str, series: str, x, metric: str, value: float):
+    ensure_results()
+    with open(CSV_PATH, "a") as f:
+        f.write(f"{figure},{series},{x},{metric},{value}\n")
+    print(f"  {figure:18s} {series:28s} x={x:<10} {metric}={value:.4f}")
+
+
+def make_env(noniid="label_skew", classes_per_client=2, beta=0.5, seed=0,
+             n_clients=None, imbalance_gamma=0):
+    """Dataset + partition + eval batch (paper §V-A layout)."""
+    n_clients = n_clients or N_CLIENTS
+    data = mnist_like(6000 if FULL else 2500, seed=seed)
+    train, test = data.split(0.85)
+    if noniid == "iid":
+        from repro.data import iid_partition
+        parts = iid_partition(train.y, n_clients, seed=seed)
+    elif noniid == "dirichlet":
+        parts = dirichlet_partition(train.y, n_clients, beta=beta, seed=seed)
+    else:
+        parts = skewed_label_partition(train.y, n_clients, classes_per_client, seed=seed)
+    ds = FederatedDataset(train, parts)
+    eval_batch = {"x": test.x[:EVAL_N], "y": test.y[:EVAL_N]}
+    return ds, eval_batch
+
+
+def make_sdfeel(ds, *, topology="ring", tau1=5, tau2=1, alpha=1, lr=0.05,
+                n_clusters=None, latency=MNIST_LATENCY, seed=0,
+                assignments=None) -> SDFEELSimulator:
+    n_clusters = n_clusters or N_CLUSTERS
+    c = ds.num_clients
+    assign = assignments or tuple(i * n_clusters // c for i in range(c))
+    spec = ClusterSpec(c, tuple(assign), ds.data_sizes())
+    cfg = SDFEELConfig(
+        clusters=spec, topology=TOPOLOGIES[topology](n_clusters),
+        tau1=tau1, tau2=tau2, alpha=alpha, learning_rate=lr,
+    )
+    return SDFEELSimulator(MnistCNN(), cfg, latency=latency, seed=seed)
+
+
+def run_history(sim_or_trainer, ds, iters=None, seed=0, eval_batch=None, eval_every=None):
+    iters = iters or ITERS
+    eval_every = eval_every or max(10, iters // 8)
+    rng = np.random.default_rng(seed)
+    batch_fn = lambda k: ds.stacked_batch(BATCH, rng)
+    return sim_or_trainer.run(iters, batch_fn, eval_batch, eval_every=eval_every)
+
+
+def timer():
+    t0 = time.time()
+    return lambda: time.time() - t0

@@ -1,0 +1,74 @@
+"""Roofline report: renders the dry-run JSONL sweeps into the §Roofline table.
+
+Reads results/dryrun_single.jsonl (and _multi if present); prints the
+per-(arch x shape) three-term roofline, dominant bottleneck, MODEL_FLOPS
+ratio, and a one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+NOTES = {
+    ("moe", "prefill", "collective"): "localize MoE dispatch sort per data shard (shard_map)",
+    ("moe", "train", "memory"): "FSDP client replicas / microbatch local steps",
+    ("moe", "train", "collective"): "structured gossip aggregation instead of dense T_k",
+    ("*", "train", "memory"): "Pallas flash attention (VMEM-resident softmax) + microbatching",
+    ("*", "train", "collective"): "sequence-parallel activations (reduce-scatter TP)",
+    ("*", "prefill", "memory"): "Pallas flash attention kernel removes softmax HBM traffic",
+    ("*", "decode", "memory"): "decode reads all weights per token: raise batch or quantize",
+    ("*", "decode", "collective"): "batch the gather of q heads across layers",
+    ("*", "*", "compute"): "near roofline: overlap collectives with compute",
+}
+
+
+def note_for(family: str, step: str, dominant: str) -> str:
+    for key in ((family, step, dominant), ("*", step, dominant), ("*", "*", dominant)):
+        if key in NOTES:
+            return NOTES[key]
+    return "-"
+
+
+def load(mesh: str):
+    path = os.path.join(RESULTS, f"dryrun_{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r.get("fl_impl") or "-")] = r
+    return list(recs.values())
+
+
+def family_of(arch: str) -> str:
+    from repro.configs import get_config
+    return get_config(arch).family
+
+
+def main(mesh: str = "single") -> dict:
+    recs = [r for r in load(mesh) if r.get("ok")]
+    print(f"# Roofline table ({mesh}-pod, {len(recs)} records)")
+    header = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} "
+              f"{'dominant':>10s} {'useful':>7s} {'fits':>5s}  next-lever")
+    print(header)
+    summary = {"records": len(recs), "fails": 0, "dominant": {}}
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t, m = r["roofline"], r["memory"]
+        fam = family_of(r["arch"])
+        note = note_for(fam, r["step"], t["dominant"])
+        print(f"{r['arch']:22s} {r['shape']:12s} {t['compute_s']:9.4f} {t['memory_s']:9.4f} "
+              f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+              f"{(r.get('useful_flop_ratio') or 0):7.3f} {'Y' if m['fits_16gb'] else 'N':>5s}  {note}")
+        summary["dominant"][t["dominant"]] = summary["dominant"].get(t["dominant"], 0) + 1
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,66 @@
+"""End-to-end driver: federated training of a ~100M-parameter LM with SD-FEEL.
+
+    PYTHONPATH=src python examples/train_federated_lm.py [--steps 200]
+
+Builds a 12-layer / d_model=768 llama-style decoder (~110M params with the
+granite-8b family config scaled down), 8 clients in 4 ring clusters, and runs
+a few hundred SD-FEEL iterations of real next-token training on synthetic
+Markov corpora (one distinct corpus per client = non-IID).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.sdfeel import FLSpec, build_fl_train_step, init_stacked
+from repro.data.synthetic import SyntheticLM
+from repro.models import CausalLM
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--clients", type=int, default=8)
+ap.add_argument("--d-model", type=int, default=768)
+ap.add_argument("--layers", type=int, default=12)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--batch", type=int, default=4)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    get_config("granite-8b"),
+    num_layers=args.layers, d_model=args.d_model, d_ff=4 * args.d_model,
+    num_heads=12, num_kv_heads=4, head_dim=64, vocab_size=8192,
+    dtype="float32", remat=False, attn_chunk=128,
+)
+model = CausalLM(cfg)
+print(f"LM config: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
+      f"-> {cfg.param_count() / 1e6:.1f}M params")
+
+fl = FLSpec(num_clients=args.clients, num_clusters=4, tau1=2, tau2=2, alpha=2,
+            learning_rate=0.3)
+opt = optim.sgd(fl.learning_rate)
+params = init_stacked(model, args.clients, jax.random.PRNGKey(0))
+opt_state = ()
+
+streams = [SyntheticLM.generate(512, args.seq, cfg.vocab_size, seed=11 * i)
+           for i in range(args.clients)]
+iters = [s.batches(args.batch, seed=i) for i, s in enumerate(streams)]
+proto = fl.protocol()
+steps = {ev: jax.jit(build_fl_train_step(model, opt, fl, event=ev))
+         for ev in ("local", "intra", "inter")}
+
+t0 = time.time()
+for k in range(1, args.steps + 1):
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
+    event = proto.event_at(k)
+    params, opt_state, loss = steps[event](params, opt_state, batch)
+    if k % 20 == 0 or k == 1:
+        print(f"step {k:4d} [{event:5s}] loss={float(loss):.4f}  "
+              f"({(time.time() - t0):.0f}s)")
+
+m = jnp.full((args.clients,), 1.0 / args.clients)
+global_params = jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), params)
+print("consensus model extracted; done.")

@@ -1,0 +1,105 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs for the dry-run.
+
+Four shapes (from the brief):
+    train_4k     seq_len=4096    global_batch=256   -> train_step
+    prefill_32k  seq_len=32768   global_batch=32    -> prefill_step
+    decode_32k   seq_len=32768   global_batch=128   -> serve_step (1 new token)
+    long_500k    seq_len=524288  global_batch=1     -> serve_step, sub-quadratic
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins
+(no device allocation), covering every model input including the stubbed
+modality frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+__all__ = ["InputShape", "SHAPES", "input_specs", "make_concrete_batch"]
+
+StepKind = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: StepKind
+    long_context: bool = False
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", long_context=True),
+}
+
+
+def _token_shape(cfg: ArchConfig, batch: int, seq: int) -> tuple[int, ...]:
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        return (batch, cfg.num_codebooks, seq)
+    return (batch, seq)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, num_clients: int | None = None) -> dict:
+    """ShapeDtypeStructs for the step's data inputs.
+
+    For ``train`` the leading axis is the client axis (federated replicas) and
+    tokens are (C, per_client_batch, S).  ``num_clients`` defaults to the
+    engine's mesh-derived value and must divide global_batch.
+    """
+    i32 = jnp.int32
+    s, b = shape.seq_len, shape.global_batch
+    if shape.step == "train":
+        c = num_clients or 1
+        if b % c:
+            raise ValueError(f"global_batch {b} % num_clients {c} != 0")
+        per = b // c
+        tok = _token_shape(cfg, per, s)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((c,) + tok, i32),
+            "labels": jax.ShapeDtypeStruct((c,) + tok, i32),
+        }
+        if cfg.frontend_tokens:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (c, per, cfg.frontend_tokens, cfg.d_model), cfg.param_dtype
+            )
+        return specs
+    if shape.step == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), i32)}
+        if cfg.frontend_tokens:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), cfg.param_dtype
+            )
+        return specs
+    # decode: one new token per sequence + current position (cache passed
+    # separately as ShapeDtypeStructs by the launcher).
+    tok = (b, cfg.num_codebooks) if cfg.modality == "audio" and cfg.num_codebooks > 1 else (b,)
+    return {
+        "token": jax.ShapeDtypeStruct(tok, i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_concrete_batch(cfg: ArchConfig, shape: InputShape, rng_seed: int = 0, num_clients: int | None = None) -> dict:
+    """Small concrete analogue of input_specs for smoke tests (reduced cfgs)."""
+    import numpy as np
+
+    rng = np.random.default_rng(rng_seed)
+    specs = input_specs(cfg, shape, num_clients)
+    out = {}
+    for k, spec in specs.items():
+        if spec.dtype == jnp.int32:
+            hi = cfg.vocab_size if k in ("tokens", "labels", "token") else max(shape.seq_len, 1)
+            arr = rng.integers(0, hi, size=spec.shape).astype(np.int32) if spec.shape else np.int32(shape.seq_len - 1)
+            out[k] = jnp.asarray(arr)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=spec.shape), dtype=spec.dtype)
+    return out

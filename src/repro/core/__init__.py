@@ -1,0 +1,23 @@
+"""SD-FEEL core: the paper's primary contribution as a composable JAX module."""
+from .topology import Topology, ring, star, fully_connected, chain, partially_connected, torus_2d, mixing_matrix, zeta
+from .protocol import ClusterSpec, SDFEELConfig, transition_matrix
+from .staleness import psi_inverse, psi_constant, psi_exponential, staleness_mixing_matrix
+from .aggregation import apply_transition_dense, stack_clients, unstack_clients
+from .latency import LatencyModel, MNIST_LATENCY, CIFAR_LATENCY
+from .sdfeel import SDFEELSimulator, FLSpec, build_fl_train_step, init_stacked, TrainHistory
+from .async_engine import AsyncConfig, AsyncSDFEEL, make_speeds
+from .baselines import FedAvgTrainer, HierFAVGTrainer, FEELTrainer
+from . import theory
+
+__all__ = [
+    "Topology", "ring", "star", "fully_connected", "chain", "partially_connected",
+    "torus_2d", "mixing_matrix", "zeta",
+    "ClusterSpec", "SDFEELConfig", "transition_matrix",
+    "psi_inverse", "psi_constant", "psi_exponential", "staleness_mixing_matrix",
+    "apply_transition_dense", "stack_clients", "unstack_clients",
+    "LatencyModel", "MNIST_LATENCY", "CIFAR_LATENCY",
+    "SDFEELSimulator", "FLSpec", "build_fl_train_step", "init_stacked", "TrainHistory",
+    "AsyncConfig", "AsyncSDFEEL", "make_speeds",
+    "FedAvgTrainer", "HierFAVGTrainer", "FEELTrainer",
+    "theory",
+]

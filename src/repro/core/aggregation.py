@@ -1,0 +1,176 @@
+"""Aggregation operators for SD-FEEL — dense (paper-faithful) and structured.
+
+Two interchangeable implementations of the Lemma-1 transition ``W <- W @ T_k``
+on a pytree of client-stacked parameters ``(C, ...)``:
+
+* ``dense``:   the faithful linear-algebra form — one einsum against the
+  ``C x C`` transition matrix (``V B`` or ``V P^alpha B``).  Under pjit with
+  the client axis sharded over the mesh ``data`` axis, XLA lowers this to
+  all-gather + local GEMM: correct but collective-hungry (it moves every
+  client's full model to every device).
+
+* ``gossip``:  the structured/beyond-paper form used inside ``shard_map``:
+  - intra-cluster aggregation = weighted hypercube all-reduce over each
+    contiguous client group via ``lax.ppermute`` (log2(c) steps, bytes
+    proportional to one model, not C models);
+  - inter-cluster aggregation = ring neighbor exchange via ``lax.ppermute``
+    repeated ``alpha`` times — the ring edge-server graph of the paper maps
+    1:1 onto the TPU ICI ring.
+
+Equivalence of the two paths (for ring topologies and power-of-two cluster
+sizes) is asserted in tests/test_aggregation.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "apply_transition_dense",
+    "stack_clients",
+    "unstack_clients",
+    "hypercube_cluster_allreduce",
+    "ring_gossip",
+    "dense_gossip_reference",
+]
+
+PyTree = Any
+
+
+def stack_clients(trees: list[PyTree]) -> PyTree:
+    """[tree_0 .. tree_{C-1}] -> tree of arrays with a leading client axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def unstack_clients(stacked: PyTree, num_clients: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x, i=i: x[i], stacked) for i in range(num_clients)]
+
+
+def apply_transition_dense(stacked: PyTree, t_matrix: jax.Array) -> PyTree:
+    """W <- W @ T_k on a (C, ...) stacked pytree (paper Lemma 1).
+
+    ``t_matrix[j, d]`` is the weight of client j's model in client d's new
+    model; dtype of the parameters is preserved (mixing in f32)."""
+
+    def _apply(w):
+        out = jnp.einsum(
+            "c...,cd->d...", w.astype(jnp.float32), t_matrix.astype(jnp.float32)
+        )
+        return out.astype(w.dtype)
+
+    return jax.tree.map(_apply, stacked)
+
+
+def dense_gossip_reference(cluster_models: PyTree, p_matrix: jax.Array, alpha: int) -> PyTree:
+    """Y <- Y @ P^alpha on (D, ...) cluster-stacked models (eq. 4 oracle)."""
+    p_a = jnp.linalg.matrix_power(p_matrix.astype(jnp.float32), alpha)
+    return apply_transition_dense(cluster_models, p_a)
+
+
+# --------------------------------------------------------------------------
+# Structured collective path (used inside shard_map over the client axis).
+# --------------------------------------------------------------------------
+
+def hypercube_cluster_allreduce(
+    x: jax.Array,
+    axis_name: str,
+    axis_size: int,
+    cluster_size: int,
+    weight: jax.Array,
+):
+    """Weighted all-reduce within contiguous groups of ``cluster_size`` devices.
+
+    Implements intra-cluster aggregation (eq. 2-3): every device in a cluster
+    ends up with ``sum_{i in cluster} weight_i * x_i``  (``weight_i = m^_i``).
+    ``cluster_size`` must be a power of two and divide ``axis_size``; groups
+    are aligned (client c belongs to cluster c // cluster_size), so XOR
+    partners never cross a group boundary.
+
+    Cost: log2(c) ppermute steps of one model shard each — vs. the dense
+    path's all-gather of C model shards.
+    """
+    if cluster_size & (cluster_size - 1):
+        raise ValueError("cluster_size must be a power of two for the hypercube path")
+    if axis_size % cluster_size:
+        raise ValueError("cluster_size must divide axis_size")
+    acc = x * weight
+    step = 1
+    while step < cluster_size:
+        perm = [(i, i ^ step) for i in range(axis_size)]
+        acc = acc + jax.lax.ppermute(acc, axis_name, perm)
+        step <<= 1
+    return acc
+
+
+def ring_gossip(
+    y: jax.Array,
+    axis_name: str,
+    axis_size: int,
+    cluster_size: int,
+    w_left: jax.Array,
+    w_self: jax.Array,
+    w_right: jax.Array,
+    alpha: int,
+):
+    """alpha rounds of ring gossip (eq. 4 with a ring topology).
+
+    Each device holds its cluster's aggregated model ``y`` (identical within a
+    cluster after ``hypercube_cluster_allreduce``).  One round:
+
+        y_d <- w_left[d] * y_{d-1} + w_self[d] * y_d + w_right[d] * y_{d+1}
+
+    realized by two ``ppermute`` shifts of ``cluster_size`` devices along the
+    client axis (cluster neighbors are ICI neighbors on a TPU ring).
+    ``w_*`` are per-cluster columns of the eq-(5) mixing matrix; scalars are
+    broadcast.  With data-ratio weighting P is column-stochastic — the
+    weighted cluster mean is preserved exactly as in the dense path.
+    """
+    num_clusters = axis_size // cluster_size
+    if num_clusters < 2:
+        raise ValueError("ring gossip needs >= 2 clusters")
+    idx = jax.lax.axis_index(axis_name)
+    cluster = idx // cluster_size
+
+    def pick(w):
+        w = jnp.asarray(w, dtype=jnp.float32)
+        if w.ndim == 0:
+            return w
+        return w[cluster]
+
+    wl, ws, wr = pick(w_left), pick(w_self), pick(w_right)
+    # receive-from-left: device i gets the value of device i - cluster_size.
+    perm_from_left = [((i - cluster_size) % axis_size, i) for i in range(axis_size)]
+    perm_from_right = [((i + cluster_size) % axis_size, i) for i in range(axis_size)]
+
+    for _ in range(alpha):
+        from_left = jax.lax.ppermute(y, axis_name, perm_from_left)
+        from_right = jax.lax.ppermute(y, axis_name, perm_from_right)
+        y = (wl * from_left + ws * y + wr * from_right).astype(y.dtype)
+    return y
+
+
+def ring_mixing_weights(p_matrix: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Extract (w_left, w_self, w_right) columns from a ring mixing matrix.
+
+    For cluster d the eq-(4) update uses column d of P: contributions from
+    d-1 (left), d (self) and d+1 (right).  Raises if P has support off the
+    ring stencil.
+    """
+    d = p_matrix.shape[0]
+    w_left = np.zeros(d)
+    w_self = np.zeros(d)
+    w_right = np.zeros(d)
+    stencil = np.zeros_like(p_matrix, dtype=bool)
+    for col in range(d):
+        left, right = (col - 1) % d, (col + 1) % d
+        w_left[col] = p_matrix[left, col]
+        w_self[col] = p_matrix[col, col]
+        w_right[col] = p_matrix[right, col]
+        stencil[[left, col, right], col] = True
+    if np.any(np.abs(np.where(stencil, 0.0, p_matrix)) > 1e-12):
+        raise ValueError("mixing matrix has support outside the ring stencil")
+    return w_left, w_self, w_right

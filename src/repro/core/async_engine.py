@@ -1,0 +1,216 @@
+"""Asynchronous SD-FEEL (Section IV) — event-driven, latency-faithful engine.
+
+TPU SPMD programs are lock-step, so device-level asynchrony is *simulated*
+(exactly as in the paper, which is simulation-only): each edge cluster is an
+event in a priority queue keyed by wall-clock finish time.  When cluster ``d``
+fires at global iteration ``t``:
+
+  1. every client ``i in C_d`` runs ``theta_i = clip(h_i * beta)`` local SGD
+     epochs within the deadline ``T_comp^(d)`` and normalizes its update by
+     ``theta_i``                                          (eq. 18-19);
+  2. the edge server applies the weighted update with gain
+     ``theta_bar_d = sum m^_i theta_i``                     (eq. 20);
+  3. the staleness-aware mixing matrix ``P_t`` built from the iteration gaps
+     ``delta_t^(j) = t - t'(j)`` re-mixes the closed neighborhood (eq. 21-22);
+  4. ``t <- t + 1``; the next event for ``d`` is scheduled after its fixed
+     iteration latency (Lemma 4's bounded-gap setting).
+
+``psi`` selects staleness weighting: the paper's ``1/(2(delta+1))``
+(staleness-aware) or a constant (the "vanilla async" baseline of Fig. 10a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .latency import LatencyModel
+from .protocol import ClusterSpec
+from .staleness import psi_inverse, staleness_mixing_matrix
+from .topology import Topology
+
+__all__ = ["AsyncConfig", "AsyncSDFEEL", "make_speeds"]
+
+
+def make_speeds(num_clients: int, heterogeneity: float, seed: int = 0) -> np.ndarray:
+    """Client speeds h_i with heterogeneity gap H = max h / min h."""
+    rng = np.random.default_rng(seed)
+    if heterogeneity <= 1.0:
+        return np.ones(num_clients)
+    h = rng.uniform(1.0, heterogeneity, size=num_clients)
+    h[rng.integers(num_clients)] = 1.0            # pin the slowest
+    h[rng.integers(num_clients)] = heterogeneity  # pin the fastest
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    clusters: ClusterSpec
+    topology: Topology
+    speeds: np.ndarray                  # h_i per client
+    learning_rate: float = 0.01
+    theta_min: int = 1
+    theta_max: int = 20
+    min_batches: int = 4                # deadline: slowest client fits this many
+    psi: Callable = psi_inverse
+    alpha_latency: Optional[LatencyModel] = None
+
+    def theta(self) -> np.ndarray:
+        """theta_i: local epochs within each cluster's deadline (eq. 18)."""
+        h = np.asarray(self.speeds, dtype=np.float64)
+        out = np.zeros(len(h), dtype=np.int64)
+        for d in range(self.clusters.num_clusters):
+            idx = self.clusters.clients_of(d)
+            slowest = h[idx].min()
+            # deadline T_d = min_batches * batch_time(slowest in cluster)
+            out[idx] = np.clip(
+                np.floor(self.min_batches * h[idx] / slowest),
+                self.theta_min,
+                self.theta_max,
+            ).astype(np.int64)
+        return out
+
+    def iter_times(self) -> np.ndarray:
+        """Per-cluster iteration latency T_iter^(d) (compute + comms)."""
+        lat = self.alpha_latency
+        h = np.asarray(self.speeds, dtype=np.float64)
+        times = np.zeros(self.clusters.num_clusters)
+        for d in range(self.clusters.num_clusters):
+            idx = self.clusters.clients_of(d)
+            slowest = h[idx].min()
+            if lat is None:
+                comp = self.min_batches / slowest
+                comm = 0.5
+            else:
+                comp = self.min_batches * lat.t_comp(slowest)
+                comm = lat.t_comm_client_server() + lat.t_comm_server_server()
+            times[d] = comp + comm
+        return times
+
+
+class AsyncSDFEEL:
+    """Event-driven asynchronous SD-FEEL trainer."""
+
+    def __init__(self, model, cfg: AsyncConfig, seed: int = 0):
+        self.model = model
+        self.cfg = cfg
+        self.theta = cfg.theta()
+        self.iter_times = cfg.iter_times()
+        d = cfg.clusters.num_clusters
+        key = jax.random.PRNGKey(seed)
+        w0 = model.init(key)
+        # per-cluster models, stacked (D, ...)
+        self.y = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (d,) + x.shape).copy(), w0)
+        self.t = 0
+        self.last_update = np.zeros(d, dtype=np.int64)  # t'(d)
+        self.clock = 0.0
+        self._queue: list[tuple[float, int]] = [(self.iter_times[j], j) for j in range(d)]
+        heapq.heapify(self._queue)
+        self._m_tilde = jnp.asarray(cfg.clusters.m_tilde(), jnp.float32)
+        lr = cfg.learning_rate
+        theta_max = int(self.theta.max())
+
+        def client_delta(params, batches, theta_i):
+            """theta_i masked local epochs; returns normalized update (eq 19)."""
+
+            def step(w, inp):
+                b, step_idx = inp
+                g = jax.grad(model.loss)(w, b)
+                mask = (step_idx < theta_i).astype(jnp.float32)
+                return jax.tree.map(lambda wi, gi: wi - lr * mask * gi, w, g), None
+
+            w_final, _ = jax.lax.scan(
+                step, params, (batches, jnp.arange(theta_max, dtype=jnp.int32))
+            )
+            return jax.tree.map(
+                lambda wf, w0_: (wf - w0_) / theta_i.astype(jnp.float32), w_final, params
+            )
+
+        def cluster_update(y_d, batches, thetas, m_hat):
+            """eq. 20: y^ = y + theta_bar sum_i m^_i Delta_i (vmap over clients)."""
+            deltas = jax.vmap(client_delta, in_axes=(None, 0, 0))(y_d, batches, thetas)
+            theta_bar = jnp.sum(m_hat * thetas.astype(jnp.float32))
+            return jax.tree.map(
+                lambda y, dl: y
+                + theta_bar * jnp.einsum("c...,c->...", dl, m_hat),
+                y_d,
+                deltas,
+            )
+
+        self._cluster_update = jax.jit(cluster_update)
+
+        def mix(y, p_t):
+            return jax.tree.map(
+                lambda w: jnp.einsum(
+                    "d...,dj->j...", w.astype(jnp.float32), p_t
+                ).astype(w.dtype),
+                y,
+            )
+
+        self._mix = jax.jit(mix)
+
+        def global_model(y):
+            return jax.tree.map(lambda w: jnp.einsum("d...,d->...", w, self._m_tilde), y)
+
+        self._global = jax.jit(global_model)
+        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
+        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
+
+    # ------------------------------------------------------------------
+    def step(self, batcher) -> int:
+        """Process one cluster event; returns the triggering cluster index."""
+        cfg = self.cfg
+        self.clock, d = heapq.heappop(self._queue)
+        clients = cfg.clusters.clients_of(d)
+        theta_max = int(self.theta.max())
+
+        # gather theta_max batches per client (masked beyond theta_i)
+        xs, ys = [], []
+        for c in clients:
+            bx, by = [], []
+            for _ in range(theta_max):
+                b = batcher.next_batch(c)
+                bx.append(b["x"])
+                by.append(b["y"])
+            xs.append(np.stack(bx))
+            ys.append(np.stack(by))
+        batches = {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+        thetas = jnp.asarray(self.theta[clients], jnp.int32)
+        m_hat = jnp.asarray(cfg.clusters.m_hat()[clients], jnp.float32)
+
+        y_d = jax.tree.map(lambda w: w[d], self.y)
+        y_hat_d = self._cluster_update(y_d, batches, thetas, m_hat)
+        y = jax.tree.map(lambda w, yh: w.at[d].set(yh), self.y, y_hat_d)
+
+        # staleness-aware inter-cluster mixing (eq. 21-22)
+        gaps = (self.t - self.last_update).astype(np.float64)
+        gaps[d] = 0.0
+        p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
+        self.y = self._mix(y, jnp.asarray(p_t, jnp.float32))
+
+        self.t += 1
+        self.last_update[d] = self.t
+        heapq.heappush(self._queue, (self.clock + self.iter_times[d], d))
+        return d
+
+    def global_params(self):
+        return self._global(self.y)
+
+    def run(self, num_events: int, batcher, eval_batch=None, eval_every: int = 20):
+        from .sdfeel import TrainHistory
+
+        hist = TrainHistory([], [], [], [])
+        for e in range(1, num_events + 1):
+            self.step(batcher)
+            if eval_batch is not None and (e % eval_every == 0 or e == num_events):
+                g = self.global_params()
+                hist.iterations.append(self.t)
+                hist.wallclock.append(self.clock)
+                hist.loss.append(float(self._eval_loss(g, eval_batch)))
+                if self._eval_acc is not None:
+                    hist.accuracy.append(float(self._eval_acc(g, eval_batch)))
+        return hist

@@ -1,0 +1,181 @@
+"""Baseline FL systems the paper compares against (Table I, Figs. 4-6).
+
+* ``FedAvgTrainer``  — clients <-> Cloud PS, aggregation every ``tau``
+  iterations over all clients (McMahan et al.).  Slow client-cloud links.
+* ``HierFAVGTrainer``— client-edge-cloud hierarchy (Liu et al.): intra-cluster
+  aggregation every ``tau1``, *perfect* global (cloud) aggregation every
+  ``tau1*tau2`` — the zeta^alpha = 0 limit of SD-FEEL (Remark 3), but paying
+  the edge<->cloud latency.
+* ``FEELTrainer``    — a single edge server with limited coverage, randomly
+  scheduling ``schedule_size`` of its accessible clients per round.
+
+All three reuse the SD-FEEL aggregation algebra (they are special cases of
+the Lemma-1 transition) and report wall-clock via the §V-B latency model.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregation import apply_transition_dense
+from .latency import LatencyModel
+from .protocol import ClusterSpec
+from .sdfeel import TrainHistory
+
+__all__ = ["FedAvgTrainer", "HierFAVGTrainer", "FEELTrainer"]
+
+
+class _StackedTrainer:
+    """Shared machinery: stacked client params + vmapped local SGD."""
+
+    def __init__(self, model, num_clients: int, lr: float, seed: int = 0):
+        self.model = model
+        self.num_clients = num_clients
+        key = jax.random.PRNGKey(seed)
+        w0 = model.init(key)
+        self.params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape).copy(), w0
+        )
+
+        def local_step(params, batch):
+            grads = jax.vmap(jax.grad(model.loss))(params, batch)
+            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+        self._local_step = jax.jit(local_step)
+        self._apply_t = jax.jit(apply_transition_dense)
+        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
+        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
+
+    def _mean_transition(self, weights: np.ndarray) -> jnp.ndarray:
+        """T = w 1^T (every client receives the weighted global mean)."""
+        w = np.asarray(weights, dtype=np.float64)
+        w = w / w.sum()
+        return jnp.asarray(np.tile(w[:, None], (1, self.num_clients)), jnp.float32)
+
+    def _run(self, num_iterations, batch_fn, iter_time_fn, agg_fn, eval_batch, eval_every):
+        hist = TrainHistory([], [], [], [])
+        clock = 0.0
+        for k in range(1, num_iterations + 1):
+            batch = jax.tree.map(jnp.asarray, batch_fn(k))
+            self.params = self._local_step(self.params, batch)
+            agg_fn(k)
+            clock += iter_time_fn(k)
+            if eval_batch is not None and (k % eval_every == 0 or k == num_iterations):
+                g = self.global_params()
+                hist.iterations.append(k)
+                hist.wallclock.append(clock)
+                hist.loss.append(float(self._eval_loss(g, eval_batch)))
+                if self._eval_acc is not None:
+                    hist.accuracy.append(float(self._eval_acc(g, eval_batch)))
+        return hist
+
+    def global_params(self):
+        m = jnp.full((self.num_clients,), 1.0 / self.num_clients, jnp.float32)
+        return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), self.params)
+
+
+class FedAvgTrainer(_StackedTrainer):
+    def __init__(self, model, num_clients: int, tau: int = 5, lr: float = 0.01,
+                 latency: Optional[LatencyModel] = None, seed: int = 0,
+                 data_sizes: Optional[np.ndarray] = None):
+        super().__init__(model, num_clients, lr, seed)
+        self.tau = tau
+        self.latency = latency
+        sizes = data_sizes if data_sizes is not None else np.ones(num_clients)
+        self._t_global = self._mean_transition(sizes)
+
+    def run(self, num_iterations, batch_fn, eval_batch=None, eval_every=50):
+        def agg(k):
+            if k % self.tau == 0:
+                self.params = self._apply_t(self.params, self._t_global)
+
+        def t_iter(k):
+            if self.latency is None:
+                return 1.0
+            t = self.latency.t_comp()
+            if k % self.tau == 0:
+                t += self.latency.t_comm_client_cloud()
+            return t
+
+        return self._run(num_iterations, batch_fn, t_iter, agg, eval_batch, eval_every)
+
+
+class HierFAVGTrainer(_StackedTrainer):
+    def __init__(self, model, clusters: ClusterSpec, tau1: int = 5, tau2: int = 2,
+                 lr: float = 0.01, latency: Optional[LatencyModel] = None, seed: int = 0):
+        super().__init__(model, clusters.num_clients, lr, seed)
+        self.clusters = clusters
+        self.tau1, self.tau2 = tau1, tau2
+        self.latency = latency
+        v, b = clusters.V(), clusters.B()
+        self._t_intra = jnp.asarray(v @ b, jnp.float32)
+        self._t_global = self._mean_transition(np.asarray(clusters.data_sizes))
+
+    def run(self, num_iterations, batch_fn, eval_batch=None, eval_every=50):
+        def agg(k):
+            if k % (self.tau1 * self.tau2) == 0:
+                self.params = self._apply_t(self.params, self._t_global)
+            elif k % self.tau1 == 0:
+                self.params = self._apply_t(self.params, self._t_intra)
+
+        def t_iter(k):
+            if self.latency is None:
+                return 1.0
+            t = self.latency.t_comp()
+            if k % self.tau1 == 0:
+                t += self.latency.t_comm_client_server()
+            if k % (self.tau1 * self.tau2) == 0:
+                t += self.latency.t_comm_server_cloud()
+            return t
+
+        return self._run(num_iterations, batch_fn, t_iter, agg, eval_batch, eval_every)
+
+
+class FEELTrainer(_StackedTrainer):
+    """Single edge server, limited coverage, random schedule per round.
+
+    Only ``pool`` clients are reachable; each aggregation round schedules
+    ``schedule_size`` of them uniformly at random.  Unscheduled clients are
+    overwritten with the broadcast model (they do not contribute gradients —
+    their local training this round is discarded, matching partial
+    participation)."""
+
+    def __init__(self, model, num_clients: int, pool: Optional[list[int]] = None,
+                 schedule_size: int = 5, tau: int = 5, lr: float = 0.01,
+                 latency: Optional[LatencyModel] = None, seed: int = 0):
+        super().__init__(model, num_clients, lr, seed)
+        self.pool = pool if pool is not None else list(range(min(num_clients, 10)))
+        self.schedule_size = min(schedule_size, len(self.pool))
+        self.tau = tau
+        self.latency = latency
+        self._rng = np.random.default_rng(seed + 1)
+
+    def run(self, num_iterations, batch_fn, eval_batch=None, eval_every=50):
+        def agg(k):
+            if k % self.tau == 0:
+                sched = self._rng.choice(self.pool, size=self.schedule_size, replace=False)
+                t = np.zeros((self.num_clients, self.num_clients))
+                w = 1.0 / self.schedule_size
+                # every client receives the mean of the scheduled clients' models
+                for i in sched:
+                    t[i, :] = w
+                self.params = self._apply_t(self.params, jnp.asarray(t, jnp.float32))
+
+        def t_iter(k):
+            if self.latency is None:
+                return 1.0
+            t = self.latency.t_comp()
+            if k % self.tau == 0:
+                t += self.latency.t_comm_client_server()
+            return t
+
+        return self._run(num_iterations, batch_fn, t_iter, agg, eval_batch, eval_every)
+
+    def global_params(self):
+        m = np.zeros(self.num_clients)
+        m[self.pool] = 1.0 / len(self.pool)
+        mj = jnp.asarray(m, jnp.float32)
+        return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, mj), self.params)

@@ -1,0 +1,301 @@
+"""Synchronous SD-FEEL engines.
+
+Two engines share the same protocol math (``protocol.py`` / ``aggregation.py``):
+
+* ``SDFEELSimulator`` — host-driven loop over Algorithm 1 for the paper's
+  simulation experiments (50 clients / 10 edge servers / small CNNs).  Client
+  models are stacked on a leading axis and updated with ``vmap(grad)``;
+  wall-clock time is accounted with the §V-B latency model.
+
+* ``build_fl_train_step`` — the SPMD production path: one jitted SD-FEEL
+  *iteration* where the client axis is sharded over the mesh ``data`` axis
+  (one client replica per data index; the ``pod`` axis data-parallelizes each
+  client's batch) and the model axes are tensor-parallel.  The aggregation
+  event of the lowered step is static (``local`` / ``intra`` / ``inter``), so
+  the dry-run can lower the heaviest (inter) iteration.  Aggregation impl:
+  ``dense`` (Lemma-1 einsum, paper-faithful) or ``gossip`` (structured
+  ppermute collectives — the beyond-paper optimized path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import Optimizer
+from .aggregation import (
+    apply_transition_dense,
+    hypercube_cluster_allreduce,
+    ring_gossip,
+    ring_mixing_weights,
+)
+from .latency import LatencyModel
+from .protocol import SDFEELConfig, transition_matrix
+
+PyTree = Any
+
+__all__ = ["SDFEELSimulator", "FLSpec", "build_fl_train_step", "TrainHistory"]
+
+
+# ---------------------------------------------------------------------------
+# Host-driven simulator (paper experiments)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainHistory:
+    iterations: list
+    wallclock: list
+    loss: list
+    accuracy: list
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class SDFEELSimulator:
+    """Algorithm 1 over stacked client models (host loop, CPU-friendly)."""
+
+    def __init__(
+        self,
+        model,
+        cfg: SDFEELConfig,
+        latency: Optional[LatencyModel] = None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.cfg = cfg
+        self.latency = latency
+        c = cfg.clusters.num_clients
+        key = jax.random.PRNGKey(seed)
+        w0 = model.init(key)
+        # identical init on every client (Algorithm 1 line 1)
+        self.params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (c,) + x.shape).copy(), w0)
+        self._t_intra = jnp.asarray(transition_matrix(cfg, "intra"), jnp.float32)
+        self._t_inter = jnp.asarray(transition_matrix(cfg, "inter"), jnp.float32)
+        self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
+        lr = cfg.learning_rate
+
+        def local_step(params, batch):
+            grads = jax.vmap(jax.grad(model.loss))(params, batch)
+            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+        self._local_step = jax.jit(local_step)
+        if cfg.aggregation_impl == "pallas":
+            # Pallas path (interpret=True on CPU): intra-cluster weighted
+            # reduce + alpha fused gossip rounds as TPU kernels.
+            from repro.kernels import cluster_agg_tree, gossip_mix_tree
+
+            spec, p_mat = cfg.clusters, jnp.asarray(cfg.P(), jnp.float32)
+            m_hat = jnp.asarray(spec.m_hat(), jnp.float32)
+            b_mat = jnp.asarray(spec.B(), jnp.float32)
+            d_count = spec.num_clusters
+            alpha = cfg.alpha
+            interp = jax.default_backend() != "tpu"
+
+            def pallas_apply(stacked, event):
+                y = cluster_agg_tree(stacked, m_hat, d_count, interpret=interp)
+                if event == "inter":
+                    y = gossip_mix_tree(y, p_mat, alpha=alpha, interpret=interp)
+                # broadcast back to clients (B^T selection)
+                return jax.tree.map(
+                    lambda w: jnp.einsum("d...,di->i...", w, b_mat), y
+                )
+
+            self._pallas_apply = pallas_apply
+        self._apply_t = jax.jit(apply_transition_dense)
+
+        def global_model(params):
+            return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
+
+        self._global_model = jax.jit(global_model)
+        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
+        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
+
+    # -- one protocol iteration (local + scheduled aggregation) -------------
+    def step(self, k: int, stacked_batch: dict) -> str:
+        batch = jax.tree.map(jnp.asarray, stacked_batch)
+        self.params = self._local_step(self.params, batch)
+        event = self.cfg.event_at(k)
+        if event in ("intra", "inter"):
+            if self.cfg.aggregation_impl == "pallas":
+                self.params = self._pallas_apply(self.params, event)
+            else:
+                t = self._t_intra if event == "intra" else self._t_inter
+                self.params = self._apply_t(self.params, t)
+        return event
+
+    def iteration_time(self, event: str) -> float:
+        if self.latency is None:
+            return 0.0
+        t = self.latency.t_comp()
+        if event in ("intra", "inter"):
+            t += self.latency.t_comm_client_server()
+        if event == "inter":
+            t += self.cfg.alpha * self.latency.t_comm_server_server()
+        return t
+
+    def global_params(self) -> PyTree:
+        """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
+        return self._global_model(self.params)
+
+    def run(
+        self,
+        num_iterations: int,
+        batch_fn: Callable[[int], dict],
+        eval_batch: Optional[dict] = None,
+        eval_every: int = 50,
+    ) -> TrainHistory:
+        hist = TrainHistory([], [], [], [])
+        clock = 0.0
+        for k in range(1, num_iterations + 1):
+            event = self.step(k, batch_fn(k))
+            clock += self.iteration_time(event)
+            if eval_batch is not None and (k % eval_every == 0 or k == num_iterations):
+                g = self.global_params()
+                hist.iterations.append(k)
+                hist.wallclock.append(clock)
+                hist.loss.append(float(self._eval_loss(g, eval_batch)))
+                if self._eval_acc is not None:
+                    hist.accuracy.append(float(self._eval_acc(g, eval_batch)))
+        return hist
+
+
+# ---------------------------------------------------------------------------
+# SPMD production step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FLSpec:
+    """Federated layout on the production mesh."""
+
+    num_clients: int          # == mesh data-axis size in SPMD mode
+    num_clusters: int
+    tau1: int = 2
+    tau2: int = 1
+    alpha: int = 2
+    learning_rate: float = 0.01
+    impl: str = "dense"       # dense | gossip
+    topology: str = "ring"
+
+    @property
+    def cluster_size(self) -> int:
+        if self.num_clients % self.num_clusters:
+            raise ValueError("clients must divide evenly into clusters")
+        return self.num_clients // self.num_clusters
+
+    def protocol(self) -> SDFEELConfig:
+        from .protocol import ClusterSpec
+        from .topology import TOPOLOGIES
+
+        return SDFEELConfig(
+            clusters=ClusterSpec.uniform(self.num_clients, self.num_clusters),
+            topology=TOPOLOGIES[self.topology](self.num_clusters),
+            tau1=self.tau1,
+            tau2=self.tau2,
+            alpha=self.alpha,
+            learning_rate=self.learning_rate,
+        )
+
+
+def build_fl_train_step(
+    model,
+    opt: Optimizer,
+    fl: FLSpec,
+    event: str = "inter",
+    mesh: Optional[jax.sharding.Mesh] = None,
+    param_specs: Optional[PyTree] = None,
+    microbatch: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``params``/``opt_state`` carry a leading client axis of size
+    ``fl.num_clients``.  ``batch`` leaves are (C, per_client_batch, ...).
+    ``event`` statically selects which Lemma-1 transition the step applies.
+    ``mesh``/``param_specs`` are required for the ``gossip`` impl (shard_map).
+    """
+    proto = fl.protocol()
+    t_np = transition_matrix(proto, event)
+    t_const = jnp.asarray(t_np, jnp.float32)
+    p_np = proto.P()
+
+    if fl.impl == "gossip" and event != "local":
+        if fl.topology != "ring" or fl.num_clusters < 3:
+            raise ValueError("gossip impl supports ring topologies with >= 3 clusters")
+        w_l, w_s, w_r = ring_mixing_weights(p_np)
+        m_hat = proto.clusters.m_hat()
+        if mesh is None or param_specs is None:
+            raise ValueError("gossip impl needs mesh + param_specs")
+        client_axis = "data"
+        axis_size = fl.num_clients
+
+        def _aggregate(params):
+            def agg(tree):
+                def per_leaf(x):
+                    # local client dim is 1 on each data shard
+                    y = hypercube_cluster_allreduce(
+                        x, client_axis, axis_size, fl.cluster_size,
+                        jnp.float32(1.0 / fl.cluster_size),
+                    )
+                    if event == "inter":
+                        y = ring_gossip(
+                            y, client_axis, axis_size, fl.cluster_size,
+                            jnp.asarray(w_l, jnp.float32),
+                            jnp.asarray(w_s, jnp.float32),
+                            jnp.asarray(w_r, jnp.float32),
+                            fl.alpha,
+                        )
+                    return y.astype(x.dtype)
+
+                return jax.tree.map(per_leaf, tree)
+
+            return jax.shard_map(
+                agg, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs,
+                check_vma=False,
+            )(params)
+
+    else:
+
+        def _aggregate(params):
+            if event == "local":
+                return params
+            return apply_transition_dense(params, t_const)
+
+    def train_step(params, opt_state, batch):
+        def client_loss(p, b):
+            return model.loss(p, b)
+
+        if microbatch > 1:
+            # gradient accumulation: identical SGD math (mean of micro-grads
+            # == grad of the mean loss), 1/microbatch the activation memory.
+            def client_grads(p, b):
+                mb = jax.tree.map(
+                    lambda x: x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:]),
+                    b,
+                )
+
+                def acc_fn(carry, chunk):
+                    l, g = jax.value_and_grad(client_loss)(p, chunk)
+                    return (carry[0] + l, jax.tree.map(jnp.add, carry[1], g)), None
+
+                zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+                (l, g), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zeros), mb)
+                scale = 1.0 / microbatch
+                return l * scale, jax.tree.map(lambda x: x * scale, g)
+
+            loss, grads = jax.vmap(client_grads)(params, batch)
+        else:
+            loss, grads = jax.vmap(jax.value_and_grad(client_loss))(params, batch)
+        params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
+        params = _aggregate(params)
+        return params, opt_state, loss.mean()
+
+    return train_step
+
+
+def init_stacked(model, num_clients: int, rng) -> PyTree:
+    """Identical initial model replicated on the client axis."""
+    w0 = model.init(rng)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape).copy(), w0)

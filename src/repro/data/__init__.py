@@ -1,0 +1,15 @@
+from .synthetic import SyntheticClassification, SyntheticLM, mnist_like, cifar_like
+from .partition import dirichlet_partition, skewed_label_partition, iid_partition
+from .loader import FederatedDataset, ClientBatcher
+
+__all__ = [
+    "SyntheticClassification",
+    "SyntheticLM",
+    "mnist_like",
+    "cifar_like",
+    "dirichlet_partition",
+    "skewed_label_partition",
+    "iid_partition",
+    "FederatedDataset",
+    "ClientBatcher",
+]

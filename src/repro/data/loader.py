@@ -1,0 +1,64 @@
+"""Federated batching: per-client mini-batch streams over a partition."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .synthetic import SyntheticClassification
+
+__all__ = ["FederatedDataset", "ClientBatcher"]
+
+
+@dataclasses.dataclass
+class FederatedDataset:
+    """A dataset + client partition; yields stacked per-client batches."""
+
+    data: SyntheticClassification
+    parts: list[np.ndarray]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.parts)
+
+    def data_sizes(self) -> tuple[float, ...]:
+        return tuple(float(len(p)) for p in self.parts)
+
+    def stacked_batch(self, batch_size: int, rng: np.random.Generator) -> dict:
+        """One mini-batch per client, stacked: x (C, b, ...), y (C, b)."""
+        xs, ys = [], []
+        for p in self.parts:
+            idx = p[rng.integers(0, len(p), size=batch_size)]
+            xs.append(self.data.x[idx])
+            ys.append(self.data.y[idx])
+        return {"x": np.stack(xs), "y": np.stack(ys)}
+
+    def client_batch(self, client: int, batch_size: int, rng: np.random.Generator) -> dict:
+        p = self.parts[client]
+        idx = p[rng.integers(0, len(p), size=batch_size)]
+        return {"x": self.data.x[idx], "y": self.data.y[idx]}
+
+    def eval_batch(self, test: SyntheticClassification, max_samples: int = 2048) -> dict:
+        n = min(max_samples, len(test))
+        return {"x": test.x[:n], "y": test.y[:n]}
+
+
+class ClientBatcher:
+    """Stateful per-client epoch iterator (used by the async engine)."""
+
+    def __init__(self, dataset: FederatedDataset, batch_size: int, seed: int = 0):
+        self.ds = dataset
+        self.batch_size = batch_size
+        self.rngs = [np.random.default_rng(seed + 7919 * i) for i in range(dataset.num_clients)]
+
+    def next_batch(self, client: int) -> dict:
+        return self.ds.client_batch(client, self.batch_size, self.rngs[client])
+
+    def next_stacked(self, clients: list[int] | None = None) -> dict:
+        clients = clients if clients is not None else list(range(self.ds.num_clients))
+        xs, ys = [], []
+        for c in clients:
+            b = self.next_batch(c)
+            xs.append(b["x"])
+            ys.append(b["y"])
+        return {"x": np.stack(xs), "y": np.stack(ys)}

@@ -1,0 +1,102 @@
+"""Synthetic datasets standing in for MNIST / CIFAR-10 (offline substitute).
+
+The paper evaluates on MNIST and CIFAR-10, which are unavailable offline.  We
+generate Gaussian-mixture classification tasks with the same label structure
+(10 classes) and image-like shapes so the paper's CNNs and non-IID
+partitioners run unchanged.  A token-level LM task generator supports the
+federated-LM example for the assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["SyntheticClassification", "SyntheticLM", "mnist_like", "cifar_like"]
+
+
+@dataclasses.dataclass
+class SyntheticClassification:
+    """Gaussian-mixture images: class c has mean pattern mu_c, noise sigma."""
+
+    x: np.ndarray  # (N, H, W, C) float32 in [0, 1]-ish
+    y: np.ndarray  # (N,) int32 labels
+    num_classes: int
+
+    @staticmethod
+    def generate(
+        num_samples: int,
+        image_shape: tuple[int, int, int],
+        num_classes: int = 10,
+        noise: float = 0.35,
+        seed: int = 0,
+    ) -> "SyntheticClassification":
+        rng = np.random.default_rng(seed)
+        h, w, c = image_shape
+        # Low-frequency class prototypes: random smooth patterns per class.
+        freq = rng.normal(size=(num_classes, 4, 4, c)).astype(np.float32)
+        protos = np.stack(
+            [
+                np.kron(freq[k], np.ones((h // 4 + 1, w // 4 + 1, 1), np.float32))[
+                    :h, :w, :
+                ]
+                for k in range(num_classes)
+            ]
+        )
+        y = rng.integers(0, num_classes, size=num_samples).astype(np.int32)
+        x = protos[y] + noise * rng.normal(size=(num_samples, h, w, c)).astype(np.float32)
+        return SyntheticClassification(x=x.astype(np.float32), y=y, num_classes=num_classes)
+
+    def split(self, frac: float = 0.8) -> tuple["SyntheticClassification", "SyntheticClassification"]:
+        n = int(len(self.y) * frac)
+        return (
+            SyntheticClassification(self.x[:n], self.y[:n], self.num_classes),
+            SyntheticClassification(self.x[n:], self.y[n:], self.num_classes),
+        )
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+
+def mnist_like(num_samples: int = 6000, seed: int = 0) -> SyntheticClassification:
+    return SyntheticClassification.generate(num_samples, (28, 28, 1), seed=seed)
+
+
+def cifar_like(num_samples: int = 6000, seed: int = 0) -> SyntheticClassification:
+    return SyntheticClassification.generate(num_samples, (32, 32, 3), seed=seed)
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Markov-chain token streams for language-model training/serving tests."""
+
+    tokens: np.ndarray  # (N, S+1) int32
+    vocab_size: int
+
+    @staticmethod
+    def generate(
+        num_sequences: int,
+        seq_len: int,
+        vocab_size: int,
+        order_mix: float = 0.7,
+        seed: int = 0,
+    ) -> "SyntheticLM":
+        rng = np.random.default_rng(seed)
+        # Sparse bigram transition structure -> learnable statistics.
+        hot = rng.integers(0, vocab_size, size=(vocab_size, 4))
+        seqs = np.empty((num_sequences, seq_len + 1), dtype=np.int32)
+        state = rng.integers(0, vocab_size, size=num_sequences)
+        for t in range(seq_len + 1):
+            seqs[:, t] = state
+            nxt_hot = hot[state, rng.integers(0, 4, size=num_sequences)]
+            nxt_rand = rng.integers(0, vocab_size, size=num_sequences)
+            state = np.where(rng.random(num_sequences) < order_mix, nxt_hot, nxt_rand)
+        return SyntheticLM(tokens=seqs, vocab_size=vocab_size)
+
+    def batches(self, batch_size: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        n = len(self.tokens)
+        while True:
+            idx = rng.integers(0, n, size=batch_size)
+            chunk = self.tokens[idx]
+            yield {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}

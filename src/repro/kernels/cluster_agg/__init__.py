@@ -1,0 +1,5 @@
+from .ops import cluster_agg, cluster_agg_tree
+from .ref import cluster_agg_ref
+from .kernel import cluster_agg_pallas
+
+__all__ = ["cluster_agg", "cluster_agg_tree", "cluster_agg_ref", "cluster_agg_pallas"]

@@ -1,0 +1,38 @@
+"""Jitted wrapper for the cluster-aggregation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cluster_agg_pallas
+from .ref import cluster_agg_ref
+
+__all__ = ["cluster_agg", "cluster_agg_tree"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_clusters", "impl", "interpret", "tile_m"))
+def cluster_agg(w, weights, num_clusters: int, impl: str = "pallas",
+                interpret: bool = False, tile_m: int = 512):
+    if impl == "ref":
+        return cluster_agg_ref(w, weights, num_clusters)
+    return cluster_agg_pallas(w, weights, num_clusters, tile_m=tile_m, interpret=interpret)
+
+
+def cluster_agg_tree(tree, weights, num_clusters: int, impl: str = "pallas",
+                     interpret: bool = False, tile_m: int = 512):
+    """Aggregate a (C, ...) stacked pytree into a (D, ...) pytree."""
+    c = weights.shape[0]
+
+    def per_leaf(w):
+        m = int(w.size // c)
+        flat = w.reshape(c, m)
+        pad = (-m) % tile_m
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        out = cluster_agg(flat, weights, num_clusters, impl=impl,
+                          interpret=interpret, tile_m=tile_m)
+        return out[:, :m].reshape((num_clusters,) + w.shape[1:])
+
+    return jax.tree.map(per_leaf, tree)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for intra-cluster weighted aggregation."""
+import jax
+import jax.numpy as jnp
+
+
+def cluster_agg_ref(w: jax.Array, weights: jax.Array, num_clusters: int) -> jax.Array:
+    c, m = w.shape
+    g = c // num_clusters
+    wf = w.astype(jnp.float32).reshape(num_clusters, g, m)
+    wt = weights.astype(jnp.float32).reshape(num_clusters, g)
+    return jnp.einsum("dgm,dg->dm", wf, wt).astype(w.dtype)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention.
+
+Forward flash attention with online softmax, causal *block skipping* (the XLA
+blocked path must mask-and-compute every block — this kernel halves the FLOPs
+on causal shapes and prunes further under a sliding window), GQA head
+grouping via BlockSpec index maps, optional logit softcap (gemma2/grok).
+
+Layout (per grid step):
+    q tile:   (1, bq, hd)  VMEM   @ (bh, qi)
+    k tile:   (1, bk, hd)  VMEM   @ (bkv(bh), ki)   bkv = b * Hkv + h // G
+    v tile:   (1, bk, hd)  VMEM   @ (bkv(bh), ki)
+    out tile: (1, bq, hd)  VMEM   @ (bh, qi), written on the diagonal step
+Scratch (VMEM, persists across the sequential kv grid dim):
+    m, l: (bq,) f32 running max / normalizer;  acc: (bq, hd) f32.
+Grid: (B * Hq, S // bq, S // bk) — last dim sequential ("arbitrary").
+
+MXU alignment: bq, bk multiples of 128; hd padded to 128 by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, bq: int, bk: int, window: Optional[int], logit_cap: Optional[float], scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    # causal block range: kv blocks [first, qi] are live for q block qi
+    if window is None:
+        first = 0
+    else:
+        first = jnp.maximum(0, (qi * bq - window + 1) // bk)
+    last = (qi * bq + bq - 1) // bk  # diagonal block (bq == bk => qi)
+
+    @pl.when(ki == first)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((ki >= first) & (ki <= last))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # (bq, bk)
+        if logit_cap is not None:
+            scores = logit_cap * jnp.tanh(scores / logit_cap)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == last)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        out_ref[0] = out.astype(out_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, S, Hq, hd); k, v: (B, S, Hkv, hd). Returns (B, S, Hq, hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    if s % bq or s % bk:
+        raise ValueError(f"S={s} must be divisible by block sizes ({bq}, {bk})")
+    scale = hd ** -0.5
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+
+    def kv_index(bh, qi, ki):
+        return (bh // hq) * hkv + (bh % hq) // g, ki, 0
+
+    out = pl.pallas_call(
+        functools.partial(
+            flash_attention_kernel,
+            bq=bq, bk=bk, window=window, logit_cap=logit_cap, scale=scale,
+        ),
+        grid=(b * hq, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m: running max
+            pltpu.VMEM((bq,), jnp.float32),       # l: running normalizer
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,44 @@
+"""Jitted wrapper for flash attention (pallas | ref dispatch, hd padding)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "logit_cap", "impl", "interpret", "bq", "bk")
+)
+def flash_attention(
+    q, k, v,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    impl: str = "pallas",
+    interpret: bool = False,
+    bq: int = 128,
+    bk: int = 128,
+):
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, window=window, logit_cap=logit_cap)
+    hd = q.shape[-1]
+    pad = (-hd) % 128  # MXU lane alignment
+    if pad:
+        padf = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        # note: rescale is handled inside the kernel via the *original* hd
+        # scale; padding zeros do not change scores.
+        out = flash_attention_pallas(
+            padf(q) * jnp.asarray((hd + pad) ** 0.5 / hd ** 0.5, q.dtype),
+            padf(k), padf(v),
+            window=window, logit_cap=logit_cap, bq=bq, bk=bk, interpret=interpret,
+        )
+        return out[..., :hd]
+    return flash_attention_pallas(
+        q, k, v, window=window, logit_cap=logit_cap, bq=bq, bk=bk, interpret=interpret
+    )

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: exact causal GQA attention with window + softcap."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = hd ** -0.5
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)

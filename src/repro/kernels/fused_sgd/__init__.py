@@ -1,0 +1,9 @@
+from .ops import sgd_update, normalized_update, sgd_update_tree
+from .ref import sgd_update_ref, normalized_update_ref
+from .kernel import sgd_update_pallas, normalized_update_pallas
+
+__all__ = [
+    "sgd_update", "normalized_update", "sgd_update_tree",
+    "sgd_update_ref", "normalized_update_ref",
+    "sgd_update_pallas", "normalized_update_pallas",
+]

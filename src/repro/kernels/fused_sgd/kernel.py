@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused SGD update + eq-(19) normalized client update.
+
+Two elementwise streaming kernels (HBM-bandwidth-bound; fusing the dtype
+casts, scale and subtraction into one pass avoids XLA materializing f32
+intermediates for bf16 parameters):
+
+* ``sgd_update``:        w <- w - lr * g
+* ``normalized_update``: delta <- (w_final - w_start) * inv_theta   (eq. 19)
+
+Block layout: flat (TM,)-tiles in VMEM; grid (M // TM,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sgd_update_pallas", "normalized_update_pallas"]
+
+
+def _sgd_kernel(w_ref, g_ref, out_ref, *, lr: float):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - lr * g).astype(out_ref.dtype)
+
+
+def _norm_update_kernel(wf_ref, w0_ref, out_ref, *, inv_theta: float):
+    wf = wf_ref[...].astype(jnp.float32)
+    w0 = w0_ref[...].astype(jnp.float32)
+    out_ref[...] = ((wf - w0) * inv_theta).astype(out_ref.dtype)
+
+
+def _tiled_call(kernel, a: jax.Array, b: jax.Array, tile_m: int, interpret: bool):
+    (m,) = a.shape
+    if m % tile_m:
+        raise ValueError(f"M={m} must be divisible by tile {tile_m}")
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def sgd_update_pallas(w, g, lr: float, tile_m: int = 1024, interpret: bool = False):
+    return _tiled_call(functools.partial(_sgd_kernel, lr=lr), w, g, tile_m, interpret)
+
+
+def normalized_update_pallas(w_final, w_start, inv_theta: float, tile_m: int = 1024, interpret: bool = False):
+    return _tiled_call(
+        functools.partial(_norm_update_kernel, inv_theta=inv_theta),
+        w_final, w_start, tile_m, interpret,
+    )

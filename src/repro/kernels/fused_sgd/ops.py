@@ -1,0 +1,41 @@
+"""Jitted wrappers: fused SGD / normalized update over flat arrays or pytrees."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import normalized_update_pallas, sgd_update_pallas
+from .ref import normalized_update_ref, sgd_update_ref
+
+__all__ = ["sgd_update", "normalized_update", "sgd_update_tree"]
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "impl", "interpret", "tile_m"))
+def sgd_update(w, g, lr: float, impl: str = "pallas", interpret: bool = False, tile_m: int = 1024):
+    if impl == "ref":
+        return sgd_update_ref(w, g, lr)
+    return sgd_update_pallas(w, g, lr, tile_m=tile_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("inv_theta", "impl", "interpret", "tile_m"))
+def normalized_update(w_final, w_start, inv_theta: float, impl: str = "pallas",
+                      interpret: bool = False, tile_m: int = 1024):
+    if impl == "ref":
+        return normalized_update_ref(w_final, w_start, inv_theta)
+    return normalized_update_pallas(w_final, w_start, inv_theta, tile_m=tile_m, interpret=interpret)
+
+
+def sgd_update_tree(params, grads, lr: float, impl: str = "pallas",
+                    interpret: bool = False, tile_m: int = 1024):
+    def per_leaf(w, g):
+        flat, gflat = w.reshape(-1), g.reshape(-1)
+        pad = (-flat.size) % tile_m
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+            gflat = jnp.pad(gflat, (0, pad))
+        out = sgd_update(flat, gflat, lr, impl=impl, interpret=interpret, tile_m=tile_m)
+        return out[: w.size].reshape(w.shape)
+
+    return jax.tree.map(per_leaf, params, grads)

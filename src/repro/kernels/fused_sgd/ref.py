@@ -1,0 +1,12 @@
+"""Pure-jnp oracles for the fused-SGD kernels."""
+import jax.numpy as jnp
+
+
+def sgd_update_ref(w, g, lr: float):
+    return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+
+
+def normalized_update_ref(w_final, w_start, inv_theta: float):
+    return (
+        (w_final.astype(jnp.float32) - w_start.astype(jnp.float32)) * inv_theta
+    ).astype(w_final.dtype)

@@ -1,0 +1,5 @@
+from .ops import gossip_mix, gossip_mix_tree
+from .ref import gossip_mix_ref
+from .kernel import gossip_mix_pallas
+
+__all__ = ["gossip_mix", "gossip_mix_tree", "gossip_mix_ref", "gossip_mix_pallas"]

@@ -1,0 +1,37 @@
+"""Jitted wrapper: gossip-mix a pytree of stacked cluster models."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gossip_mix_pallas
+from .ref import gossip_mix_ref
+
+__all__ = ["gossip_mix", "gossip_mix_tree"]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "impl", "interpret", "tile_m"))
+def gossip_mix(y, p, alpha: int = 1, impl: str = "pallas", interpret: bool = False, tile_m: int = 512):
+    if impl == "ref":
+        return gossip_mix_ref(y, p, alpha)
+    return gossip_mix_pallas(y, p, alpha, tile_m=tile_m, interpret=interpret)
+
+
+def gossip_mix_tree(tree, p, alpha: int = 1, impl: str = "pallas", interpret: bool = False, tile_m: int = 512):
+    """Apply gossip mixing to every leaf of a (D, ...) stacked pytree.
+
+    Leaves are flattened to (D, M) with M padded up to the tile size."""
+    d = p.shape[0]
+
+    def per_leaf(w):
+        m = int(w.size // d)
+        flat = w.reshape(d, m)
+        pad = (-m) % tile_m
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        out = gossip_mix(flat, p, alpha=alpha, impl=impl, interpret=interpret, tile_m=tile_m)
+        return out[:, :m].reshape(w.shape)
+
+    return jax.tree.map(per_leaf, tree)

@@ -1,0 +1,8 @@
+"""Launchers: production meshes, dry-run, training and serving drivers.
+
+NOTE: importing ``repro.launch.dryrun`` sets XLA_FLAGS for 512 host devices;
+do not import it from test/bench processes that need the real device count.
+"""
+from .mesh import make_production_mesh, make_test_mesh, mesh_axes_for
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes_for"]

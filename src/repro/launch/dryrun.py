@@ -1,0 +1,158 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first initialization.  Each combination lowers the appropriate step
+(train_4k -> SD-FEEL train_step; prefill_32k -> prefill_step; decode shapes ->
+serve_step), compiles it for the production mesh, prints
+``memory_analysis()`` / ``cost_analysis()``, parses collective bytes out of
+the partitioned HLO, and appends a JSON record consumed by
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline_report.py.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_prefill, build_serve, build_train, default_fl_spec
+from repro.roofline import model_flops, roofline_terms
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, fl_impl: str = "dense",
+            event: str = "inter", save_hlo: str | None = None,
+            variant: str = "default", microbatch: int = 1,
+            remat_policy: str = "full", serve_dtype: str | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if remat_policy != "full":
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if serve_dtype:
+        # fp8 weight storage for decode: activations stay bf16
+        cfg = dataclasses.replace(cfg, dtype=serve_dtype, activation_dtype="bfloat16")
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": n_chips,
+        "step": shape.step, "fl_impl": fl_impl if shape.step == "train" else None,
+        "long_context_variant": bool(
+            shape.long_context and not cfg.is_subquadratic(long_context=False)
+        ),
+    }
+    t0 = time.time()
+    with mesh:
+        if shape.step == "train":
+            fl = None if variant in ("fsdp", "pod") else default_fl_spec(mesh, impl=fl_impl)
+            jitted, abstract = build_train(cfg, shape, mesh, fl=fl, event=event,
+                                           variant=variant, microbatch=microbatch)
+            rec["variant"] = variant
+            rec["microbatch"] = microbatch
+        elif shape.step == "prefill":
+            jitted, abstract = build_prefill(cfg, shape, mesh)
+        else:
+            jitted, abstract = build_serve(cfg, shape, mesh)
+        lowered = jitted.lower(*abstract)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_per_device_gb": round(
+            (ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes
+             - ma.alias_size_in_bytes) / 2**30, 3),
+        "fits_16gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                      + ma.output_size_in_bytes - ma.alias_size_in_bytes) < 16 * 2**30,
+    }
+    terms = roofline_terms(compiled)
+    rec["roofline"] = terms.as_dict()
+    mf = model_flops(cfg, shape, shape.step)
+    rec["model_flops_global"] = mf
+    hlo_flops_global = terms.flops_per_device * n_chips
+    rec["useful_flop_ratio"] = round(mf / hlo_flops_global, 4) if hlo_flops_global else None
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "compile_s")}))
+    print("  memory:", rec["memory"])
+    print("  roofline:", {k: (round(v, 6) if isinstance(v, float) else v)
+                          for k, v in rec["roofline"].items() if k != "per_kind"})
+    print("  collectives:", terms.per_kind)
+    print("  useful_flop_ratio:", rec["useful_flop_ratio"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--fl-impl", choices=["dense", "gossip"], default="dense")
+    ap.add_argument("--event", choices=["local", "intra", "inter"], default="inter")
+    ap.add_argument("--all", action="store_true", help="sweep all arch x shape")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", choices=["default", "fsdp", "pod"], default="default")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--remat-policy", choices=["full", "dots"], default="full")
+    ap.add_argument("--serve-dtype", default=None,
+                    help="weight storage dtype for serve steps (e.g. float8_e4m3fn)")
+    args = ap.parse_args()
+
+    combos = (
+        [(a, s) for a in ARCH_NAMES for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r.get("fl_impl") or "dense"))
+                except json.JSONDecodeError:
+                    pass
+
+    failures = 0
+    for arch, shape in combos:
+        key = (arch, shape, args.mesh, args.fl_impl)
+        if key in done:
+            print(f"skip (done): {key}")
+            continue
+        try:
+            rec = run_one(arch, shape, args.mesh, args.fl_impl, args.event,
+                          args.save_hlo, args.variant, args.microbatch,
+                          args.remat_policy, args.serve_dtype)
+            rec["ok"] = True
+        except Exception as e:  # record the failure — it is a bug to fix
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "fl_impl": args.fl_impl, "ok": False, "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

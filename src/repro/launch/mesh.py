@@ -1,0 +1,44 @@
+"""Production meshes (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the ``pod``
+axis crosses DCN; ``data`` and ``model`` stay inside a pod's ICI fabric.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; callers (dryrun.py) must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import MeshAxes
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires enough --xla_force_host devices)."""
+    auto = jax.sharding.AxisType.Auto
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"), axis_types=(auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=(auto,) * 2)
+
+
+def mesh_axes_for(mesh: jax.sharding.Mesh) -> MeshAxes:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshAxes(
+        model="model",
+        data="data",
+        pod="pod" if "pod" in sizes else None,
+        model_size=sizes["model"],
+    )

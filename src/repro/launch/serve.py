@@ -1,0 +1,121 @@
+"""Batched decode serving driver.
+
+Prefills a batch of prompts and decodes tokens autoregressively with the
+ring-buffer KV/SSM caches.  On CPU this drives reduced configs (see
+examples/serve_decode.py); on TPU, build_serve() adds the sequence-sharded
+cache + LSE-merge decode attention.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import CausalLM
+
+
+def grow_caches(model: CausalLM, cache, new_len: int):
+    """Extend full-attention KV caches to ``new_len`` slots (pos = -1 padding).
+
+    Sliding-window layers keep their ring buffers (size = window) — the ring
+    overwrite is exactly the sliding-window eviction policy."""
+    cfg = model.cfg
+
+    def grow_layer(i, layer):
+        if cfg.layer_kind(i) == "mamba" or "k" not in layer:
+            return layer
+        if cfg.window_for_layer(i, model.long_context) is not None:
+            return layer
+        sc = layer["k"].shape[2]
+        pad = new_len - sc
+        if pad <= 0:
+            return layer
+        def padk(x):  # (nblocks, B, Sc, H, hd)
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return {
+            "k": padk(layer["k"]),
+            "v": padk(layer["v"]),
+            "pos": jnp.pad(layer["pos"], ((0, 0), (0, pad)), constant_values=-1),
+        }
+
+    return {f"pos{i}": grow_layer(i, cache[f"pos{i}"]) for i in range(cfg.scan_period)}
+
+
+def generate(model: CausalLM, params, prompts: jax.Array, gen_len: int,
+             cache_len: int | None = None, temperature: float = 0.0, seed: int = 0):
+    """prompts: (B, S) (or (B, K, S) audio). Returns generated tokens (B, gen)."""
+    cfg = model.cfg
+    s = prompts.shape[-1]
+    cache_len = cache_len or (s + gen_len)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompts})
+    cache = grow_caches(model, cache, cache_len)
+    step = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(seed)
+    outs = []
+
+    def sample(logits, key):
+        flat = logits[..., : cfg.vocab_size]
+        if temperature <= 0:
+            return jnp.argmax(flat, axis=-1)
+        return jax.random.categorical(key, flat / temperature, axis=-1)
+
+    # prefill produced a cache of length >= s; continue decoding from pos s.
+    # rebuild a decode cache of cache_len and copy: for simplicity we decode
+    # with the prefill cache when it is already long enough.
+    tok = sample(logits[:, -1], key)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        tok = tok.reshape(tok.shape[0], cfg.num_codebooks)
+    for i in range(gen_len):
+        outs.append(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = step(params, tok, cache, jnp.int32(s + i))
+        tok = sample(logits[:, -1] if logits.ndim == 3 else logits[:, -1], sub)
+        if cfg.modality == "audio" and cfg.num_codebooks > 1:
+            tok = tok.reshape(tok.shape[0], cfg.num_codebooks)
+    return jnp.stack(outs, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, cfg.num_codebooks, args.prompt_len)),
+            jnp.int32,
+        )
+    else:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+        )
+    t0 = time.time()
+    out = generate(model, params, prompts, args.gen, temperature=args.temperature)
+    dt = time.time() - t0
+    toks = out.size
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"generated {toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s incl. compile)")
+    print("sample tokens:", np.asarray(out)[0, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Step builders: jitted train / prefill / serve steps with full shardings.
+
+Each builder returns ``(jitted_fn, abstract_args)`` so the dry-run can call
+``jitted_fn.lower(*abstract_args).compile()`` with zero allocation
+(ShapeDtypeStructs all the way down), and real launchers can feed concrete
+arrays of the same structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs.shapes import InputShape, input_specs
+from repro.core.sdfeel import FLSpec, build_fl_train_step, init_stacked
+from repro.models import CausalLM
+from repro.models.config import ArchConfig
+from repro.sharding import (
+    MeshAxes,
+    batch_pspecs,
+    cache_pspecs,
+    make_decode_impl,
+    param_pspecs,
+)
+from repro.sharding.context import activation_sharding
+from .mesh import mesh_axes_for
+
+PyTree = Any
+
+__all__ = ["default_fl_spec", "build_train", "build_prefill", "build_serve"]
+
+
+def _shardings(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def default_fl_spec(mesh: jax.sharding.Mesh, impl: str = "dense") -> FLSpec:
+    """Clients = data-axis size; 4 clusters on a ring (>=4 clients)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    c = sizes["data"]
+    d = 4 if c % 4 == 0 and c >= 8 else max(2, c // 2)
+    return FLSpec(num_clients=c, num_clusters=d, tau1=2, tau2=1, alpha=2, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def build_train(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh: jax.sharding.Mesh,
+    fl: Optional[FLSpec] = None,
+    event: str = "inter",
+    donate: bool = True,
+    variant: str = "default",
+    microbatch: int = 1,
+):
+    """SD-FEEL federated train step for one protocol iteration.
+
+    variant="default": params/opt_state are client-stacked (C = data-axis
+    size, one full replica per data index); each client's batch is
+    data-parallel over ``pod``.
+
+    variant="fsdp": the data axis is re-factored into (cluster=4, fsdp=4) on
+    a *derived mesh over the same physical devices*: 4 clients (one per edge
+    cluster), each client's replica ZeRO-3-sharded over its 4-device fsdp
+    sub-axis, batch data-parallel over fsdp(+pod).  This is the only layout
+    where grok/jamba-scale members fit a v5e pod (16 full replicas demand
+    ~20 TB vs 4 TB pod HBM) — see EXPERIMENTS.md §Perf.
+    """
+    if variant == "pod":
+        # clients = pods: each pod is one SD-FEEL edge cluster; the client's
+        # replica is fully sharded over the pod's 256 chips (data x model) and
+        # inter-cluster gossip crosses DCN — the natural mapping for members
+        # whose single replica exceeds per-chip HBM x 16 (grok/jamba).
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if "pod" not in sizes:
+            raise ValueError("variant='pod' requires the multi-pod mesh")
+        ax = MeshAxes(model="model", data="pod", pod="data", model_size=sizes["model"])
+        fl = fl or FLSpec(num_clients=sizes["pod"], num_clusters=sizes["pod"],
+                          tau1=2, tau2=1, alpha=2, impl="dense")
+        fsdp_kwargs = dict(fsdp_axis="data", fsdp_size=sizes["data"])
+    elif variant == "fsdp":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data_sz, model_sz = sizes["data"], sizes["model"]
+        n_cluster, n_fsdp = 4, data_sz // 4
+        dev = mesh.devices
+        if "pod" in sizes:
+            dev = dev.reshape(sizes["pod"], n_cluster, n_fsdp, model_sz)
+            mesh = jax.sharding.Mesh(dev, ("pod", "cluster", "fsdp", "model"))
+            batch_sub = ("pod", "fsdp")
+        else:
+            dev = dev.reshape(n_cluster, n_fsdp, model_sz)
+            mesh = jax.sharding.Mesh(dev, ("cluster", "fsdp", "model"))
+            batch_sub = "fsdp"
+        ax = MeshAxes(model="model", data="cluster", pod=batch_sub, model_size=model_sz)
+        fl = fl or FLSpec(num_clients=n_cluster, num_clusters=n_cluster,
+                          tau1=2, tau2=1, alpha=2, impl="dense")
+        fsdp_kwargs = dict(fsdp_axis="fsdp", fsdp_size=n_fsdp)
+    else:
+        ax = mesh_axes_for(mesh)
+        fl = fl or default_fl_spec(mesh)
+        fsdp_kwargs = {}
+    model = CausalLM(cfg)
+    opt = optim.sgd(fl.learning_rate)
+    rng = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(lambda: init_stacked(model, fl.num_clients, rng))
+    pspecs = param_pspecs(cfg, params_shape, ax, client_axis=ax.data, **fsdp_kwargs)
+    opt_shape = jax.eval_shape(lambda: jax.vmap(opt.init)(params_shape)) if opt.name != "sgd" else ()
+    ospecs = jax.tree.map(lambda _: P(), opt_shape) if opt_shape != () else ()
+
+    batch_shape = input_specs(cfg, shape, num_clients=fl.num_clients)
+    bspecs = batch_pspecs(cfg, batch_shape, ax, "train", federated=True)
+
+    inner_step = build_fl_train_step(
+        model, opt, fl, event=event, mesh=mesh,
+        param_specs=pspecs if fl.impl == "gossip" else None,
+        microbatch=microbatch,
+    )
+
+    def step(params, opt_state, batch):
+        pod_axes = ax.pod if isinstance(ax.pod, tuple) else ((ax.pod,) if ax.pod else ())
+        # moe_shard_map=False: the model runs under vmap(clients) here —
+        # nested shard_map crashes the SPMD partitioner on multi-pod meshes,
+        # and per-client tokens are already shard-local for the dispatch.
+        with activation_sharding(mesh, pod_axes, ax.model, moe_shard_map=False):
+            return inner_step(params, opt_state, batch)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shardings(mesh, pspecs), ospecs, _shardings(mesh, bspecs)),
+        out_shardings=(_shardings(mesh, pspecs), ospecs, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    abstract = (params_shape, opt_shape, batch_shape)
+    return jitted, abstract
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh: jax.sharding.Mesh):
+    ax = mesh_axes_for(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_div = 1
+    for a in ax.batch_axes:
+        batch_div *= sizes[a]
+    model = CausalLM(cfg, long_context=shape.long_context)
+    rng = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(model.init, rng)
+    pspecs = param_pspecs(cfg, params_shape, ax)
+    batch_shape = input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, batch_shape, ax, "prefill", batch_div=batch_div)
+
+    def prefill_step(params, batch):
+        with activation_sharding(mesh, ax.batch_axes, ax.model):
+            return model.prefill(params, batch)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(_shardings(mesh, pspecs), _shardings(mesh, bspecs)),
+    )
+    return jitted, (params_shape, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# serve (decode)
+# ---------------------------------------------------------------------------
+
+def build_serve(cfg: ArchConfig, shape: InputShape, mesh: jax.sharding.Mesh):
+    """One-token decode against a seq_len KV/SSM cache."""
+    ax = mesh_axes_for(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch = shape.global_batch
+    batch_div = 1
+    for a in ax.batch_axes:
+        batch_div *= sizes[a]
+
+    if batch % batch_div == 0 and batch >= batch_div:
+        batch_axes = ax.batch_axes       # decode_32k: batch over (pod,)data
+        seq_axes = (ax.model,)           # cache seq over model
+    else:
+        batch_axes = ()                  # long_500k: batch of 1 replicated
+        seq_axes = ax.batch_axes + (ax.model,)
+
+    heads_shardable = bool(cfg.num_heads) and cfg.num_heads % ax.model_size == 0
+    decode_impl = make_decode_impl(
+        mesh, seq_axes=seq_axes, batch_axes=batch_axes,
+        gather_heads=heads_shardable, model_axis=ax.model,
+    )
+    model = CausalLM(cfg, long_context=shape.long_context, decode_impl=decode_impl)
+    rng = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(model.init, rng)
+    pspecs = param_pspecs(cfg, params_shape, ax)
+    cache_shape = jax.eval_shape(lambda: model.init_cache(batch, shape.seq_len))
+    cspecs = cache_pspecs(cfg, cache_shape, ax, seq_axes=seq_axes, batch_axes=batch_axes)
+    batch_shape = input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, batch_shape, ax, "decode", batch_div=batch_div)
+
+    def serve_step(params, cache, token, pos):
+        with activation_sharding(mesh, batch_axes, ax.model):
+            logits, new_cache = model.decode_step(params, token, cache, pos)
+        return logits, new_cache
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(
+            _shardings(mesh, pspecs),
+            _shardings(mesh, cspecs),
+            _shardings(mesh, bspecs["token"]),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, _shardings(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    abstract = (params_shape, cache_shape, batch_shape["token"], batch_shape["pos"])
+    return jitted, abstract

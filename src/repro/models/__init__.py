@@ -1,0 +1,5 @@
+from .config import ArchConfig
+from .transformer import CausalLM
+from .cnn import MnistCNN, CifarCNN, param_count
+
+__all__ = ["ArchConfig", "CausalLM", "MnistCNN", "CifarCNN", "param_count"]

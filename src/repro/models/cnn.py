@@ -1,0 +1,122 @@
+"""The paper's simulation models (§V-A).
+
+* ``MnistCNN`` — two 5x5 conv layers, 21,840 trainable parameters (exactly
+  the paper's count: conv 1->10 (260) + conv 10->20 (5,020) + fc 320->50
+  (16,050) + fc 50->10 (510)).
+* ``CifarCNN`` — six conv layers, ~5.85M parameters (paper: 5,852,170).
+
+Both are plain functional models with the same ``init``/``loss`` interface as
+``CausalLM`` so the federated engines treat them interchangeably.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MnistCNN", "CifarCNN", "param_count"]
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def _init_conv(rng, kh, kw, cin, cout):
+    scale = (kh * kw * cin) ** -0.5
+    return (
+        jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * scale,
+        jnp.zeros((cout,), jnp.float32),
+    )
+
+
+def _init_fc(rng, din, dout):
+    return (
+        jax.random.normal(rng, (din, dout), jnp.float32) * din**-0.5,
+        jnp.zeros((dout,), jnp.float32),
+    )
+
+
+class MnistCNN:
+    """Input (B, 28, 28, 1); 10 classes; 21,840 params."""
+
+    num_classes = 10
+
+    def init(self, rng):
+        ks = jax.random.split(rng, 4)
+        w1, b1 = _init_conv(ks[0], 5, 5, 1, 10)
+        w2, b2 = _init_conv(ks[1], 5, 5, 10, 20)
+        w3, b3 = _init_fc(ks[2], 320, 50)
+        w4, b4 = _init_fc(ks[3], 50, 10)
+        return {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3, "w4": w4, "b4": b4}
+
+    def apply(self, params, x):
+        x = _maxpool(jax.nn.relu(_conv(x, params["w1"], params["b1"])))  # 24->12
+        x = _maxpool(jax.nn.relu(_conv(x, params["w2"], params["b2"])))  # 8->4
+        x = x.reshape(x.shape[0], -1)  # 4*4*20 = 320
+        x = jax.nn.relu(x @ params["w3"] + params["b3"])
+        return x @ params["w4"] + params["b4"]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return (logits.argmax(-1) == batch["y"]).mean()
+
+
+class CifarCNN:
+    """Input (B, 32, 32, 3); six conv layers; ~5.85M params (paper's CIFAR CNN)."""
+
+    num_classes = 10
+
+    def init(self, rng):
+        ks = jax.random.split(rng, 8)
+        p = {}
+        specs = [(3, 64), (64, 64), (64, 128), (128, 128), (128, 256), (256, 256)]
+        for i, (cin, cout) in enumerate(specs):
+            w, b = _init_conv(ks[i], 3, 3, cin, cout)
+            p[f"cw{i}"], p[f"cb{i}"] = w, b
+        p["fw0"], p["fb0"] = _init_fc(ks[6], 256 * 2 * 2, 1024)  # after 3 pools w/ VALID convs
+        p["fw1"], p["fb1"] = _init_fc(ks[7], 1024, 10)
+        return p
+
+    def apply(self, params, x):
+        # pairs of convs + pool (VGG-ish): 32 ->(2 convs VALID) 28 -> pool 14
+        # -> 10 -> pool 5 -> ... use SAME padding to keep arithmetic simple.
+        def conv_same(x, w, b):
+            y = jax.lax.conv_general_dilated(
+                x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+            return jax.nn.relu(y + b)
+
+        for i in range(6):
+            x = conv_same(x, params[f"cw{i}"], params[f"cb{i}"])
+            if i % 2 == 1:
+                x = _maxpool(x)  # 32->16->8->4
+        x = _maxpool(x)  # 4 -> 2
+        x = x.reshape(x.shape[0], -1)  # 2*2*256 = 1024... (see init)
+        x = jax.nn.relu(x @ params["fw0"] + params["fb0"])
+        return x @ params["fw1"] + params["fb1"]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return (logits.argmax(-1) == batch["y"]).mean()

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* chunks of length Q plus a linear recurrence *across* chunks
+(``lax.scan``), giving O(S * Q) work — sub-quadratic in sequence length.
+Decode keeps an O(1)-size recurrent state per layer:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t (x) x_t),   y_t = C_t . h_t + D x_t
+
+so ``long_500k`` decoding is constant-memory in seq_len (the "KV cache" of a
+mamba layer is its SSM state + a (conv_width-1)-deep conv tail).
+
+Single B/C group (G=1) as in mamba2-780m; heads H = d_inner / head_dim.
+
+Sharding note (TPU adaptation): the reference implementation fuses
+[z, x, B, C, dt] into one ``in_proj``; we keep *separate* projections so the
+big d_inner-sized streams (z, x) tensor-shard cleanly on the ``model`` mesh
+axis without slicing a sharded dimension at non-boundary offsets (the small
+B/C/dt streams stay replicated).  Depthwise convs split per-stream, which is
+mathematically identical to conv-then-split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import rms_norm
+
+__all__ = ["init_mamba_params", "mamba_forward", "mamba_decode_step", "init_mamba_cache"]
+
+
+def init_mamba_params(rng, cfg: ArchConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    keys = jax.random.split(rng, 6)
+    dtype = cfg.param_dtype
+    s = d ** -0.5
+    nrm = jax.random.normal
+    return {
+        "w_z": (nrm(keys[0], (d, di), jnp.float32) * s).astype(dtype),
+        "w_x": (nrm(keys[1], (d, di), jnp.float32) * s).astype(dtype),
+        "w_b": (nrm(keys[2], (d, n), jnp.float32) * s).astype(dtype),
+        "w_c": (nrm(keys[3], (d, n), jnp.float32) * s).astype(dtype),
+        "w_dt": (nrm(keys[4], (d, h), jnp.float32) * s).astype(dtype),
+        "conv_x": (nrm(keys[5], (cfg.ssm_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": (nrm(keys[5], (cfg.ssm_conv, n), jnp.float32) * 0.2).astype(dtype),
+        "conv_c": (nrm(keys[5], (cfg.ssm_conv, n), jnp.float32) * 0.2).astype(dtype),
+        "bias_x": jnp.zeros((di,), dtype),
+        "bias_b": jnp.zeros((n,), dtype),
+        "bias_c": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": (nrm(keys[0], (di, d), jnp.float32) * di**-0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv, width W: y_t = sum_w w[w] * x_{t-W+1+w} + b.
+
+    x: (B, S, ch). tail: (B, W-1, ch) previous inputs (decode path).
+    Returns (silu(y), new_tail)."""
+    width = w.shape[0]
+    bsz, s, ch = x.shape
+    if tail is None:
+        tail = jnp.zeros((bsz, width - 1, ch), x.dtype)
+    ext = jnp.concatenate([tail, x], axis=1)  # (B, S+W-1, ch)
+    y = sum(
+        ext[:, i : i + s, :] * w[i][None, None, :].astype(x.dtype) for i in range(width)
+    )
+    y = y + b.astype(x.dtype)
+    new_tail = ext[:, s:, :] if s >= width - 1 else ext[:, -(width - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def ssd_chunked(x, b_mat, c_mat, a_log_inc, dt_scale, h0, chunk):
+    """Chunked SSD core.
+
+    x: (B,S,H,P) inputs; b_mat/c_mat: (B,S,N); a_log_inc: (B,S,H) negative
+    decay log-increments (dt * A); dt_scale: (B,S,H) input gains (dt);
+    h0: (B,H,N,P); chunk: Q.  Returns (y (B,S,H,P) fp32, h_final (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} not divisible by chunk {q}")
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    af = a_log_inc.astype(jnp.float32).reshape(bsz, nc, q, h)
+    dtf = dt_scale.astype(jnp.float32).reshape(bsz, nc, q, h)
+
+    seg = jnp.cumsum(af, axis=2)                        # (B,nc,Q,H) cumulative decay
+    total = seg[:, :, -1, :]                            # (B,nc,H)
+
+    # intra-chunk: Y[i] += sum_{j<=i} C_i.B_j * exp(seg_i - seg_j) * dt_j * x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)      # (B,nc,Q,Q)
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: masked (i<j) entries have decay > 0 and would overflow
+    # to inf, poisoning the backward pass through the where (inf * 0 = nan).
+    lmat = jnp.exp(jnp.where(causal[None, None, :, :, None], decay, -1e30))
+    m = scores[..., None] * lmat * dtf[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xf)
+
+    # chunk-final contributions to the state:
+    #   S_c = sum_j exp(total - seg_j) * dt_j * B_j (x) x_j
+    w = jnp.exp(total[:, :, None, :] - seg) * dtf       # (B,nc,Q,H)
+    xw = xf * w[..., None]                              # (B,nc,Q,H,P)
+    s_c = jnp.einsum("bcqn,bcqhp->bchnp", bf, xw)       # (B,nc,H,N,P)
+
+    # inter-chunk recurrence + off-diagonal output term
+    def step(hprev, inp):
+        s_chunk, tot, c_chunk, seg_chunk = inp
+        # y_off[i] = C_i . (exp(seg_i) * h_prev)
+        y_off = jnp.einsum("bqn,bhnp->bqhp", c_chunk, hprev) * jnp.exp(seg_chunk)[..., None]
+        h_new = jnp.exp(tot)[:, :, None, None] * hprev + s_chunk
+        return h_new, y_off
+
+    xs = (
+        s_c.transpose(1, 0, 2, 3, 4),       # (nc,B,H,N,P)
+        total.transpose(1, 0, 2),           # (nc,B,H)
+        cf.transpose(1, 0, 2, 3),           # (nc,B,Q,N)
+        seg.transpose(1, 0, 2, 3),          # (nc,B,Q,H)
+    )
+    h_final, y_offs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = y_intra + y_offs.transpose(1, 0, 2, 3, 4)       # (B,nc,Q,H,P)
+    return y.reshape(bsz, s, h, p), h_final
+
+
+def _project(params, x):
+    """x: (B,S,d) -> (z, xr, b, c, dt_raw) pre-conv streams."""
+    mm = lambda w: jnp.einsum("bsd,do->bso", x, w.astype(x.dtype))
+    return mm(params["w_z"]), mm(params["w_x"]), mm(params["w_b"]), mm(params["w_c"]), mm(params["w_dt"])
+
+
+def mamba_forward(params: dict, x: jax.Array, cfg: ArchConfig, h0=None, conv_tail=None):
+    """Full-sequence mamba2 mixer. x: (B,S,d) -> (y (B,S,d), (h, conv_tails))."""
+    bsz, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, b_raw, c_raw, dt_raw = _project(params, x)
+    tails = conv_tail or {"x": None, "b": None, "c": None}
+    xr, tail_x = _causal_conv(xr, params["conv_x"], params["bias_x"], tails["x"])
+    b_mat, tail_b = _causal_conv(b_raw, params["conv_b"], params["bias_b"], tails["b"])
+    c_mat, tail_c = _causal_conv(c_raw, params["conv_c"], params["bias_c"], tails["c"])
+    xi = xr.reshape(bsz, s, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                          # (H,)
+    a_inc = dt * a[None, None, :]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    y, h_final = ssd_chunked(xi, b_mat, c_mat, a_inc, dt, h0, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(bsz, s, di)
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    out = rms_norm(gated.astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    new_tails = {"x": tail_x, "b": tail_b, "c": tail_c}
+    return jnp.einsum("bsd,do->bso", out, params["out_proj"].astype(x.dtype)), (h_final, new_tails)
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv - 1
+    return {
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv_x": jnp.zeros((batch, w, di), dtype),
+        "conv_b": jnp.zeros((batch, w, n), dtype),
+        "conv_c": jnp.zeros((batch, w, n), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cfg: ArchConfig, cache: dict):
+    """One-token decode. x: (B,1,d) -> (y (B,1,d), new_cache)."""
+    bsz = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, b_raw, c_raw, dt_raw = _project(params, x)
+    xr, tail_x = _causal_conv(xr, params["conv_x"], params["bias_x"], cache["conv_x"])
+    b_mat, tail_b = _causal_conv(b_raw, params["conv_b"], params["bias_b"], cache["conv_b"])
+    c_mat, tail_c = _causal_conv(c_raw, params["conv_c"], params["bias_c"], cache["conv_c"])
+    xi = xr[:, 0].reshape(bsz, h, p).astype(jnp.float32)
+    b_vec = b_mat[:, 0].astype(jnp.float32)
+    c_vec = c_mat[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])                                            # (B,H)
+    h_new = decay[:, :, None, None] * cache["ssm"] + jnp.einsum(
+        "bn,bhp->bhnp", b_vec, xi * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_vec, h_new) + params["D"][None, :, None] * xi
+    y = y.reshape(bsz, 1, di)
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    out = rms_norm(gated.astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,do->bso", out, params["out_proj"].astype(x.dtype))
+    return out, {"ssm": h_new, "conv_x": tail_x, "conv_b": tail_b, "conv_c": tail_c}

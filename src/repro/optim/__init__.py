@@ -1,0 +1,119 @@
+"""Minimal optimizer library (no optax offline): SGD / momentum / Adam.
+
+Optimizers follow the (init, update) pair convention.  ``update`` returns
+(new_params, new_state).  ``state_dtype`` lets large-model configs keep Adam
+moments in bf16 (halves optimizer HBM — used by the grok-1 train configs, see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def sgd(learning_rate: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state):
+        new = jax.tree.map(
+            lambda p, g: (p - learning_rate * g.astype(jnp.float32).astype(p.dtype)).astype(p.dtype)
+            if p.dtype == jnp.bfloat16
+            else p - learning_rate * g,
+            params,
+            grads,
+        )
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(learning_rate: float, beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+    def update(params, grads, state):
+        new_m = jax.tree.map(
+            lambda m, g: beta * m + g.astype(state_dtype), state, grads
+        )
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - learning_rate * m.astype(jnp.float32)).astype(p.dtype),
+            params,
+            new_m,
+        )
+        return new_p, new_m
+
+    return Optimizer(init, update, "momentum")
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+def adam(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(params, grads, state):
+        step = state.step + 1
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m_new / b1t
+            vhat = v_new / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - learning_rate * delta).astype(p.dtype)
+            return p_new, m_new.astype(state_dtype), v_new.astype(state_dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init, update, "adam")
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (total + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)

@@ -1,0 +1,3 @@
+from .analysis import HW, RooflineTerms, collective_bytes, roofline_terms, model_flops
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "roofline_terms", "model_flops"]

@@ -1,0 +1,191 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+TPU v5e constants (target hardware; this container is CPU-only so terms are
+*derived*, not measured):
+
+    peak bf16 compute : 197 TFLOP/s per chip
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link
+
+``compiled.cost_analysis()`` and ``memory_analysis()`` report **per-device**
+numbers for the SPMD-partitioned module (verified empirically), so
+
+    compute term    = flops_per_device / 197e12        (== global/(chips*peak))
+    memory term     = bytes_per_device / 819e9
+    collective term = collective_operand_bytes_per_device / 50e9
+
+collective bytes are not in cost_analysis; we parse the partitioned HLO and
+sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (ragged variants included).  Ops inside
+``lax.scan`` while-loop bodies execute once per layer-block iteration, so
+parsed bytes are multiplied by the loop trip count of the enclosing while op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "roofline_terms", "model_flops"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\][^%()]*%")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_collective(line: str) -> Optional[tuple[str, int]]:
+    m = _COLLECTIVE_RE.search(line)
+    if not m:
+        return None
+    kind = m.group(1)
+    if "-done(" in line:
+        return None  # bytes counted at the -start op
+    # operand shapes: everything inside the call parens before each %operand
+    inside = line[m.end():]
+    # strip trailing attrs (after the closing paren of the operand list)
+    depth, end = 1, 0
+    for i, ch in enumerate(inside):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = inside[:end]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(operands):
+        total += _shape_bytes(dt, dims)
+    if total == 0:
+        # operands referenced without explicit shapes: fall back to result shape
+        head = line[: m.start()]
+        for dt, dims in _SHAPE_RE.findall(head):
+            total += _shape_bytes(dt, dims)
+    return kind, total
+
+
+def _while_trip_counts(hlo: str) -> dict[str, int]:
+    """Map while-body computation name -> known trip count (scan loops)."""
+    counts: dict[str, int] = {}
+    # XLA annotates known trip counts: backend_config={"known_trip_count":{"n":"24"}}
+    for m in re.finditer(
+        r"while\([^)]*\).*?body=%?([\w.\-]+).*?known_trip_count[\"':{\s]+n[\"':\s]+(\d+)",
+        hlo,
+    ):
+        counts[m.group(1)] = int(m.group(2))
+    return counts
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum per-device operand bytes of every collective in partitioned HLO.
+
+    Ops inside while-loop bodies (lax.scan over layer blocks) are weighted by
+    the loop's known trip count."""
+    trip = _while_trip_counts(hlo)
+    per_kind: dict[str, float] = {}
+    count = 0
+    current_comp = None
+    comp_mult = 1.0
+    for line in hlo.splitlines():
+        mcomp = re.match(r"\s*%?([\w.\-]+)\s+\([\w.,\s%\[\]{}]*\)\s*->", line)
+        if line.strip().startswith(("%", "ENTRY")) and "{" in line and "=" not in line.split("{")[0]:
+            name = line.strip().lstrip("%").split(" ")[0].split("(")[0].rstrip(".{")
+            current_comp = name
+            comp_mult = float(trip.get(name, 1))
+        got = _line_collective(line)
+        if got:
+            kind, nbytes = got
+            per_kind[kind] = per_kind.get(kind, 0.0) + nbytes * comp_mult
+            count += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind": per_kind, "num_ops": count}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_ops: int
+    per_kind: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        return d
+
+
+def roofline_terms(compiled) -> RooflineTerms:
+    """Derive the three terms from the partitioned HLO (see roofline.hlo).
+
+    ``cost_analysis()`` counts while-loop bodies once, so flops/bytes are
+    reconstructed by the HLO analyzer with trip-count multipliers; the raw
+    cost_analysis numbers are kept for cross-checking."""
+    from .hlo import HloAnalysis
+
+    ana = HloAnalysis(compiled.as_text())
+    flops = ana.dot_flops()
+    byts = ana.hbm_bytes()
+    cb = ana.collective_wire_bytes()
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cb["total_bytes"] / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cb["total_bytes"],
+        collective_ops=cb["num_ops"],
+        per_kind=cb["per_kind"],
+    )
+
+
+def model_flops(cfg, shape, step: str) -> float:
+    """Useful-work estimate: 6*N*D (train) / 2*N*D (fwd) with N = active params.
+
+    For decode, D = tokens generated per step (= global_batch)."""
+    n = cfg.active_param_count()
+    if step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

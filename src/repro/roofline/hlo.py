@@ -1,0 +1,392 @@
+"""Post-partitioning HLO analyzer for the dry-run roofline.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but our models
+scan over layer blocks (and blocked attention scans over q/kv chunks), so raw
+cost_analysis under-reports flops/bytes by the trip count.  This module
+parses the partitioned HLO text and reconstructs:
+
+  * total dot FLOPs, with every op weighted by the product of enclosing
+    while-loop trip counts (``known_trip_count`` backend configs);
+  * an HBM-traffic model: for every *top-level* op in each non-fusion
+    computation, traffic = result bytes + sum(operand bytes) — fusion
+    internals are excluded (they live in registers/VMEM), which is exactly
+    the fusion-boundary memory model XLA itself optimizes for;
+  * collective wire bytes per device using ring-algorithm costs:
+        all-gather:          (g-1)/g * result
+        reduce-scatter:      (g-1)   * result          (operand = g * result)
+        all-reduce:          2 (g-1)/g * size
+        all-to-all:          (g-1)/g * size
+        collective-permute:  size
+    with g the replica-group size parsed from ``replica_groups``.
+
+All numbers are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = ["HloAnalysis"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\]{},\d]+)\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_SKIP_HBM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "fusion_inner",  # sentinel, unused
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# Elementwise / layout ops that TPU XLA fuses into neighboring producers —
+# counting them separately would model the CPU backend's (looser) fusion
+# granularity instead of the TPU target's.
+_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "select",
+    "compare", "and", "or", "not", "xor", "convert", "broadcast", "iota",
+    "sign", "floor", "ceil", "clamp", "sine", "cosine", "logistic", "expm1",
+    "log1p", "remainder", "is-finite", "reduce-precision", "bitcast-convert",
+    "copy", "transpose", "reshape", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "exponential-minus-one", "atan2", "cbrt",
+    "round-nearest-afz", "round-nearest-even", "stochastic-convert", "tan",
+    "erf", "real", "imag", "map", "concatenate",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 0) for dt, dims in _SHAPE_RE.findall(text)
+    )
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_text: str
+    operands: list
+    rest: str  # attrs text after the operand list
+    is_root: bool = False
+
+    @property
+    def result_bytes(self) -> int:
+        return _shapes_bytes(self.result_text)
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.symbols: dict[str, dict[str, str]] = defaultdict(dict)  # comp -> name -> type text
+        self._parse(hlo_text)
+        self.multipliers = self._multipliers()
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        comp = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            h = _COMP_HEADER_RE.match(line)
+            if h and "=" not in line.split("(")[0]:
+                comp = h.group(1)
+                self.computations[comp] = []
+                # header params: "name: type, name: type" (types may nest)
+                params = h.group(2)
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\]{},\d])+)", params):
+                    self.symbols[comp][pm.group(1)] = pm.group(2)
+                continue
+            if comp is None:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            root_flag, name, rtype, kind, tail = m.groups()
+            # split operand list from trailing attrs (balance parens)
+            depth, end = 1, len(tail)
+            for i, ch in enumerate(tail):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(tail[:end])
+            rest = tail[end + 1:]
+            op = Op(name, kind, rtype, operands, rest, is_root=bool(root_flag))
+            self.computations[comp].append(op)
+            self.symbols[comp][name] = rtype
+
+    # -- call-graph multipliers ------------------------------------------------
+    def _multipliers(self) -> dict[str, float]:
+        edges: dict[str, list[tuple[str, float]]] = defaultdict(list)  # parent -> (child, w)
+        entry = None
+        for comp, ops in self.computations.items():
+            for op in ops:
+                if op.kind == "while":
+                    trip = _TRIP_RE.search(op.rest)
+                    w = float(trip.group(1)) if trip else 1.0
+                    b = _BODY_RE.search(op.rest)
+                    c = _COND_RE.search(op.rest)
+                    if b:
+                        edges[comp].append((b.group(1), w))
+                    if c:
+                        edges[comp].append((c.group(1), w + 1))
+                else:
+                    cm = _CALLS_RE.search(op.rest)
+                    if cm:
+                        edges[comp].append((cm.group(1), 1.0))
+                    if op.kind in ("call", "conditional"):
+                        for t in re.findall(r"to_apply=%?([\w.\-]+)", op.rest):
+                            edges[comp].append((t, 1.0))
+        # entry = computation not referenced as a child; graph is a DAG, so
+        # iterate mult(child) = sum_parents mult(parent) * weight to fixpoint.
+        children = {c for lst in edges.values() for c, _ in lst}
+        roots = [c for c in self.computations if c not in children]
+        mult = {c: (1.0 if c in roots else 0.0) for c in self.computations}
+        for _ in range(len(self.computations) + 1):
+            upd = {c: (1.0 if c in roots else 0.0) for c in self.computations}
+            for parent, lst in edges.items():
+                for child, w in lst:
+                    if child in upd:
+                        upd[child] += mult.get(parent, 0.0) * w
+            if upd == mult:
+                break
+            mult = upd
+        return mult
+
+    def _fusion_targets(self) -> set:
+        targets = set()
+        for ops in self.computations.values():
+            for op in ops:
+                if op.kind == "fusion":
+                    cm = _CALLS_RE.search(op.rest)
+                    if cm:
+                        targets.add(cm.group(1))
+                if op.kind in ("reduce", "reduce-window", "scatter", "sort", "map",
+                               "all-reduce", "reduce-scatter"):
+                    for t in re.findall(r"to_apply=%?([\w.\-]+)", op.rest):
+                        targets.add(t)
+        return targets
+
+    # -- FLOPs -----------------------------------------------------------------
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp, ops in self.computations.items():
+            mult = self.multipliers.get(comp, 1.0)
+            if mult == 0.0:
+                continue
+            table = self.symbols[comp]
+            for op in ops:
+                if op.kind not in ("dot", "convolution"):
+                    continue
+                result_elems = sum(
+                    _shape_elems(dims) for _, dims in _SHAPE_RE.findall(op.result_text)
+                )
+                contract = 1
+                if op.kind == "dot":
+                    lhs_type = table.get(op.operands[0], "") if op.operands else ""
+                    lhs_shape = _SHAPE_RE.search(lhs_type)
+                    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                    if lhs_shape and cdims and cdims.group(1):
+                        dims = [int(d) for d in lhs_shape.group(2).split(",")] if lhs_shape.group(2) else []
+                        for i in cdims.group(1).split(","):
+                            idx = int(i)
+                            if idx < len(dims):
+                                contract *= dims[idx]
+                else:
+                    # convolution: flops ~= 2 * result_elems * (kernel elems * cin)
+                    rhs_type = table.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                    rs = _SHAPE_RE.search(rhs_type)
+                    if rs and rs.group(2):
+                        dims = [int(d) for d in rs.group(2).split(",")]
+                        contract = max(1, _shape_elems(rs.group(2)) // dims[-1])
+                total += mult * 2.0 * result_elems * contract
+        return total
+
+    def _fusion_param_traffic(self, comp: str) -> tuple[dict, Optional[int]]:
+        """Per-parameter effective HBM traffic inside a fused computation.
+
+        Parameters consumed only by dynamic-slice/gather count as the slice
+        size; a parameter that is the destination of an in-place
+        dynamic-update-slice counts as the update size.  Returns
+        (param_index -> bytes-or-None(=full), root_write_bytes-or-None)."""
+        if not hasattr(self, "_fusion_cache"):
+            self._fusion_cache = {}
+        if comp in self._fusion_cache:
+            return self._fusion_cache[comp]
+        ops = self.computations.get(comp, [])
+        table = self.symbols.get(comp, {})
+        params = [op for op in ops if op.kind == "parameter"]
+        consumers: dict[str, list] = defaultdict(list)
+        for op in ops:
+            for o in op.operands:
+                consumers[o].append(op)
+        per_param: dict[int, Optional[float]] = {}
+        for idx, pop in enumerate(params):
+            cons = consumers.get(pop.name, [])
+            if cons and all(c.kind in ("dynamic-slice", "gather") for c in cons):
+                per_param[idx] = float(sum(c.result_bytes for c in cons))
+            elif cons and all(
+                c.kind == "dynamic-update-slice" and c.operands and c.operands[0] == pop.name
+                for c in cons
+            ):
+                per_param[idx] = float(sum(
+                    _shapes_bytes(table.get(c.operands[1], "")) for c in cons if len(c.operands) > 1
+                ))
+            else:
+                per_param[idx] = None  # full size
+        root_write = None
+        roots = [op for op in ops if op.is_root]
+        if roots and roots[-1].kind == "dynamic-update-slice" and len(roots[-1].operands) > 1:
+            root_write = _shapes_bytes(table.get(roots[-1].operands[1], ""))
+        out = (per_param, root_write)
+        self._fusion_cache[comp] = out
+        return out
+
+    def _is_elementwise_fusion(self, comp: str) -> bool:
+        """True if a fused computation contains only fusible elementwise ops."""
+        for op in self.computations.get(comp, []):
+            if op.kind in ("parameter", "constant"):
+                continue
+            if op.kind not in _FUSIBLE:
+                return False
+        return True
+
+    def _op_traffic(self, op: Op, table: dict) -> float:
+        if op.kind in _SKIP_HBM or op.kind in _FUSIBLE:
+            return 0.0
+        # slice/update ops touch only the slice, not the carried buffer
+        if op.kind == "dynamic-slice":
+            return 2.0 * op.result_bytes
+        if op.kind == "dynamic-update-slice":
+            upd = _shapes_bytes(table.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+            return 2.0 * upd
+        if op.kind == "gather":
+            return 2.0 * op.result_bytes
+        if op.kind == "scatter":
+            upd = _shapes_bytes(table.get(op.operands[-1], "")) if op.operands else 0
+            return float(op.result_bytes + 2 * upd)
+        if op.kind == "fusion":
+            cm = _CALLS_RE.search(op.rest)
+            if cm and self._is_elementwise_fusion(cm.group(1)):
+                # elementwise chains fuse into neighbors on TPU: traffic is
+                # attributed to the producing/consuming material ops.
+                return 0.0
+            per_param, root_write = (
+                self._fusion_param_traffic(cm.group(1)) if cm else ({}, None)
+            )
+            traffic = float(root_write if root_write is not None else op.result_bytes)
+            for i, o in enumerate(op.operands):
+                eff = per_param.get(i)
+                traffic += eff if eff is not None else _shapes_bytes(table.get(o, ""))
+            return traffic
+        traffic = float(op.result_bytes)
+        for o in op.operands:
+            traffic += _shapes_bytes(table.get(o, ""))
+        return traffic
+
+    # -- HBM traffic --------------------------------------------------------------
+    def hbm_bytes(self) -> float:
+        fusion_comps = self._fusion_targets()
+        total = 0.0
+        for comp, ops in self.computations.items():
+            if comp in fusion_comps:
+                continue
+            mult = self.multipliers.get(comp, 1.0)
+            if mult == 0.0:
+                continue
+            table = self.symbols[comp]
+            for op in ops:
+                total += mult * self._op_traffic(op, table)
+        return total
+
+    def hbm_breakdown(self, top: int = 20) -> list:
+        """Largest HBM-traffic contributors: (bytes, comp, op kind, op name)."""
+        fusion_comps = self._fusion_targets()
+        rows = []
+        for comp, ops in self.computations.items():
+            if comp in fusion_comps:
+                continue
+            mult = self.multipliers.get(comp, 1.0)
+            if mult == 0.0:
+                continue
+            table = self.symbols[comp]
+            for op in ops:
+                t = mult * self._op_traffic(op, table)
+                if t > 0:
+                    rows.append((t, comp, op.kind, op.name))
+        return sorted(rows, reverse=True)[:top]
+
+    # -- collectives ----------------------------------------------------------------
+    def collective_wire_bytes(self) -> dict:
+        per_kind: dict[str, float] = defaultdict(float)
+        n_ops = 0
+        for comp, ops in self.computations.items():
+            mult = self.multipliers.get(comp, 1.0)
+            if mult == 0.0:
+                continue
+            for op in ops:
+                kind = op.kind
+                base = kind
+                for c in COLLECTIVES:
+                    if kind == c or kind == c + "-start":
+                        base = c
+                        break
+                else:
+                    continue
+                if kind.endswith("-done"):
+                    continue
+                size = op.result_bytes
+                g = self._group_size(op)
+                if base == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif base == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif base == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    wire = float(size)
+                per_kind[base] += mult * wire
+                n_ops += 1
+        return {"total_bytes": float(sum(per_kind.values())),
+                "per_kind": dict(per_kind), "num_ops": n_ops}
+
+    @staticmethod
+    def _group_size(op: Op) -> int:
+        m = _GROUPS_SHAPE_RE.search(op.rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(op.rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 2

@@ -1,0 +1,3 @@
+from .engine import Request, BatchServer, ServeStats
+
+__all__ = ["Request", "BatchServer", "ServeStats"]

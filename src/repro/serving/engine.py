@@ -1,0 +1,172 @@
+"""Batched serving engine: request queue + length-bucketed batch scheduler.
+
+Decode steps are lock-step SPMD programs, so requests are admitted in
+batches: the scheduler drains the queue, buckets requests by padded prompt
+length (pad-to-bucket keeps the number of compiled prefill shapes small),
+right-sizes each batch to ``max_batch``, runs prefill + autoregressive
+decode through the ring-buffer caches, and returns per-request generations
+with throughput stats.  Early-stopped requests (EOS) are masked out of the
+returned text but decoded in lock-step (standard static-batch serving).
+
+On TPU the same engine runs with ``build_serve``'s sequence-sharded caches;
+here it drives reduced configs on CPU (see examples/serve_batched.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import grow_caches
+from repro.models import CausalLM
+
+__all__ = ["Request", "BatchServer", "ServeStats"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the server:
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    tokens_generated: int = 0
+    wall_s: float = 0.0
+    occupancy_sum: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / max(self.wall_s, 1e-9)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.batches, 1)
+
+
+def _bucket_len(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class BatchServer:
+    def __init__(
+        self,
+        model: CausalLM,
+        params,
+        *,
+        max_batch: int = 8,
+        length_buckets: tuple[int, ...] = (32, 64, 128),
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(length_buckets))
+        self.temperature = temperature
+        self._queue: deque[Request] = deque()
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self.stats = ServeStats()
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request):
+        if req.prompt.shape[-1] > self.buckets[-1]:
+            raise ValueError(f"prompt longer than the largest bucket {self.buckets[-1]}")
+        self._queue.append(req)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- scheduling ----------------------------------------------------------
+    def _next_batch(self) -> list[Request]:
+        """Greedy: take the head request's bucket, fill with same-bucket reqs."""
+        if not self._queue:
+            return []
+        head = self._queue[0]
+        blen = _bucket_len(head.prompt.shape[-1], self.buckets)
+        batch, rest = [], deque()
+        while self._queue and len(batch) < self.max_batch:
+            r = self._queue.popleft()
+            if _bucket_len(r.prompt.shape[-1], self.buckets) == blen:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self._queue.extendleft(reversed(rest))
+        return batch
+
+    def _run_batch(self, batch: list[Request]):
+        cfg = self.model.cfg
+        t0 = time.time()
+        blen = _bucket_len(max(r.prompt.shape[-1] for r in batch), self.buckets)
+        gen = max(r.max_new_tokens for r in batch)
+        b = len(batch)
+        # left-pad prompts to the bucket (repeat first token; positions are
+        # absolute so the pad prefix is a benign repeated-context prefix)
+        toks = np.stack([
+            np.concatenate([np.full(blen - r.prompt.shape[-1], r.prompt[0], np.int32),
+                            r.prompt.astype(np.int32)])
+            for r in batch
+        ])
+        pad_lens = np.array([blen - r.prompt.shape[-1] for r in batch])
+
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        cache = grow_caches(self.model, cache, blen + gen)
+
+        def sample(logits, key):
+            flat = logits[..., : cfg.vocab_size]
+            if self.temperature <= 0:
+                return jnp.argmax(flat, axis=-1)
+            return jax.random.categorical(key, flat / self.temperature, axis=-1)
+
+        self._key, k0 = jax.random.split(self._key)
+        tok = sample(logits[:, -1], k0)
+        outs = []
+        for i in range(gen):
+            outs.append(np.asarray(tok))
+            self._key, ki = jax.random.split(self._key)
+            logits, cache = self._decode(self.params, tok, cache, jnp.int32(blen + i))
+            tok = sample(logits[:, -1], ki)
+        gen_tokens = np.stack(outs, axis=1)  # (B, gen)
+
+        dt = time.time() - t0
+        n_tok = 0
+        for j, r in enumerate(batch):
+            seq = gen_tokens[j, : r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.nonzero(seq == r.eos_id)[0]
+                if hits.size:
+                    seq = seq[: hits[0] + 1]
+            r.output = seq
+            r.latency_s = dt
+            n_tok += int(seq.size)
+        self.stats.requests += b
+        self.stats.batches += 1
+        self.stats.tokens_generated += n_tok
+        self.stats.wall_s += dt
+        self.stats.occupancy_sum += b / self.max_batch
+        return batch
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests in completion order."""
+        done = []
+        while self._queue:
+            batch = self._next_batch()
+            done.extend(self._run_batch(batch))
+        return done

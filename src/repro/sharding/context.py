@@ -1,0 +1,99 @@
+"""Trace-time activation-sharding context.
+
+Model code (``repro.models``) is mesh-agnostic; the launch-layer step
+builders activate this context while the step is being traced so that
+layers can pin activation shardings where XLA's propagation picks a bad
+layout (measured: the MoE dispatch buffers re-replicate the batch axis,
+costing 16x redundant expert FLOPs + TB-scale all-gathers — see
+EXPERIMENTS.md §Perf iteration 2).
+
+Usage (launch layer):
+    with activation_sharding(mesh, batch_axes=("data",), model_axis="model"):
+        jitted.lower(...)          # or wrap the step fn body
+
+Model layer:
+    x = constrain_batch(x)         # shard dim 0 over the batch axes
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+__all__ = ["activation_sharding", "constrain_batch", "constrain_dim", "current", "model_axis_size"]
+
+
+def current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: jax.sharding.Mesh, batch_axes: tuple, model_axis: str = "model",
+                        moe_shard_map: bool = True):
+    """``moe_shard_map=False``: the MoE layer must not open a shard_map —
+    required when the caller wraps the model in vmap (the federated train
+    step), where nested shard_map trips an XLA SPMD-partitioner CHECK on
+    multi-pod meshes.  The per-example dispatch is already shard-local there
+    (each client's tokens live on its own data shard)."""
+    prev = current()
+    _STATE.ctx = {"mesh": mesh, "batch_axes": tuple(batch_axes),
+                  "model_axis": model_axis, "moe_shard_map": moe_shard_map}
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Pin x's ``batch_dim`` to the context's batch axes (no-op w/o context).
+
+    Divisibility-guarded: falls back to no-op when the dim cannot shard."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in ctx["batch_axes"] if a in sizes]
+    if not axes:
+        return x
+    div = 1
+    for a in axes:
+        div *= sizes[a]
+    if x.shape[batch_dim] % div:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def model_axis_size() -> int:
+    """Size of the context's model axis (1 without a context)."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    sizes = dict(zip(ctx["mesh"].axis_names, ctx["mesh"].devices.shape))
+    return sizes.get(ctx["model_axis"], 1)
+
+
+def constrain_dim(x: jax.Array, dim: int, axis: Optional[str] = None) -> jax.Array:
+    """Pin one dimension of x to a mesh axis (default: the model axis).
+
+    Used for sequence-parallel attention on members whose head count cannot
+    shard the model axis (gemma2): the q-chunk dimension is sharded instead,
+    removing the 16x redundant attention compute of full replication."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    axis = axis or ctx["model_axis"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes or x.shape[dim] % sizes[axis]:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

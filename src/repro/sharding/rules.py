@@ -1,0 +1,204 @@
+"""Per-architecture PartitionSpec rules for the production meshes.
+
+Megatron-style tensor parallelism on the ``model`` axis inside every client
+replica; the federated client axis lives on ``data`` (and each client's batch
+is data-parallel over ``pod`` when present).
+
+Rules (leaf-name driven, applied to the core shape; the scan-block leading
+dim and the FL client stacking dim are prepended as None / client axis):
+
+  embed (V, d)            -> ("model", None)      vocab-sharded
+  head  (d, V)            -> (None, "model")
+  attn wq / wo            -> head-sharded iff num_heads %% model_size == 0,
+                             else replicated (gemma2's 8 heads vs 16-way axis)
+  attn wk / wv            -> replicated (kv_heads < model_size in every
+                             assigned config; KV projections are small)
+  mlp w_gate/w_up (d, f)  -> (None, "model");  w_down (f, d) -> ("model", None)
+  moe  w_gate/w_up(E,d,f) -> (None, None, "model"); w_down -> (None,"model",None)
+  moe  w_router           -> replicated
+  mamba w_z/w_x (d, di)   -> (None, "model");  out_proj (di, d) -> ("model", None)
+  mamba conv_x/bias_x/norm_scale (di dim) -> ("model",)
+  mamba w_b/w_c/w_dt, A_log/D/dt_bias, small convs -> replicated
+  norms                    -> replicated
+
+Divisibility is checked before sharding a dimension; non-divisible dims fall
+back to replication (recorded by ``describe()`` for the dry-run report).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+__all__ = ["MeshAxes", "param_pspecs", "batch_pspecs", "cache_pspecs", "describe_sharding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    model: str = "model"
+    data: str = "data"
+    pod: Optional[str] = None           # present on the multi-pod mesh
+    model_size: int = 16
+
+    @property
+    def batch_axes(self) -> tuple:
+        return (self.pod, self.data) if self.pod else (self.data,)
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim % size == 0
+
+
+def _core_spec(path_names: list[str], shape: tuple[int, ...], cfg: ArchConfig, ax: MeshAxes):
+    """PartitionSpec for a core (unstacked) parameter leaf (full-rank specs)."""
+    name = path_names[-1]
+    ms = ax.model_size
+    m = ax.model
+    nd = len(shape)
+    rep = P(*([None] * nd))
+
+    def shard_dim(i):
+        spec = [None] * nd
+        spec[i] = m
+        return P(*spec)
+
+    def shard_last():
+        return shard_dim(nd - 1)
+
+    heads_shardable = cfg.num_heads and _divisible(cfg.num_heads, ms)
+
+    if name == "embed":
+        if nd == 3:   # audio: (K, V, d)
+            return shard_dim(1) if _divisible(shape[1], ms) else rep
+        return shard_dim(0) if _divisible(shape[0], ms) else rep
+    if name == "head":
+        if nd == 3:   # audio: (K, d, V)
+            return shard_dim(2) if _divisible(shape[2], ms) else rep
+        return shard_dim(1) if _divisible(shape[1], ms) else rep
+    if name in ("wq", "bq"):
+        return shard_last() if heads_shardable else rep
+    if name == "wo":
+        return shard_dim(0) if heads_shardable else rep
+    if name in ("wk", "wv", "bk", "bv", "w_router"):
+        return rep
+    if name in ("w_gate", "w_up"):
+        return shard_last() if _divisible(shape[-1], ms) else rep
+    if name == "w_down":
+        i = nd - 2  # (f, d) or (E, f, d)
+        return shard_dim(i) if _divisible(shape[i], ms) else rep
+    if name in ("w_z", "w_x"):
+        return shard_dim(1) if _divisible(shape[1], ms) else rep
+    if name == "out_proj":
+        return shard_dim(0) if _divisible(shape[0], ms) else rep
+    if name in ("conv_x", "bias_x", "norm_scale"):
+        return shard_last() if _divisible(shape[-1], ms) else rep
+    # w_b/w_c/w_dt, conv_b/c, bias_b/c, A_log, D, dt_bias, ln_* -> replicated
+    return rep
+
+
+def param_pspecs(cfg: ArchConfig, params_shape: PyTree, ax: MeshAxes,
+                 client_axis: Optional[str] = None,
+                 fsdp_axis: Optional[str] = None, fsdp_size: int = 1) -> PyTree:
+    """Specs mirroring the params pytree (pass jax.eval_shape(model.init, ...)).
+
+    ``client_axis``: prepend a federated client dim sharded on this axis
+    (params stacked (C, ...)) — used by the FL train step.
+    ``fsdp_axis``: additionally shard each leaf's first free (un-model-
+    sharded, divisible) dimension on this axis — the FSDP-within-cluster
+    variant for huge members (grok/jamba), see EXPERIMENTS.md §Perf.
+    """
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        shape = leaf.shape
+        in_blocks = "blocks" in names
+        core_shape = shape
+        prefix: list = []
+        if client_axis:
+            prefix.append(client_axis)
+            core_shape = core_shape[1:]
+        if in_blocks:
+            prefix.append(None)  # scan-stack dim
+            core_shape = core_shape[1:]
+        core = _core_spec(names, core_shape, cfg, ax)
+        if fsdp_axis and core_shape:
+            entries = list(core)
+            for i, (dim, sp) in enumerate(zip(core_shape, entries)):
+                if sp is None and dim % fsdp_size == 0 and dim >= fsdp_size:
+                    entries[i] = fsdp_axis
+                    break
+            core = P(*entries)
+        return P(*prefix, *core)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shape: PyTree, ax: MeshAxes,
+                 step: str, federated: bool = False, batch_div: int = 1) -> PyTree:
+    """Specs for the step's data inputs (see configs.shapes.input_specs).
+
+    ``batch_div``: product of the batch-axis sizes (divisibility check;
+    non-divisible batch dims fall back to replication — e.g. long_500k's
+    batch of 1)."""
+    batch_spec = ax.batch_axes if len(ax.batch_axes) > 1 else ax.batch_axes[0]
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        name = getattr(path[-1], "key", str(path[-1]))
+        if name == "pos":
+            return P()
+        if step == "train" and federated:
+            # leading client dim -> data; per-client batch dim -> pod
+            rest = [None] * (nd - 2)
+            return P(ax.data, ax.pod, *rest)
+        if leaf.shape and leaf.shape[0] % max(batch_div, 1) == 0:
+            return P(batch_spec, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape: PyTree, ax: MeshAxes,
+                 seq_axes: tuple, batch_axes: tuple) -> PyTree:
+    """Specs for decode caches.
+
+    KV leaves: k/v (nblocks, B, Sc, Hkv, hd); pos (nblocks, Sc).
+    Mamba leaves: ssm (nblocks, B, H, N, P); conv_* (nblocks, B, W-1, ch).
+    ``seq_axes`` shard the cache sequence dim; ``batch_axes`` shard batch.
+    """
+    seq_spec = seq_axes[0] if len(seq_axes) == 1 else (tuple(seq_axes) or None)
+    batch_spec = batch_axes[0] if len(batch_axes) == 1 else (tuple(batch_axes) or None)
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        if name == "pos":
+            return P(None, seq_spec)
+        if name in ("k", "v"):
+            return P(None, batch_spec, seq_spec, None, None)
+        if name == "ssm":
+            # shard SSD heads on model if divisible
+            h = shape[2]
+            hspec = ax.model if _divisible(h, ax.model_size) else None
+            return P(None, batch_spec, hspec, None, None)
+        if name.startswith("conv"):
+            ch = shape[-1]
+            chspec = ax.model if _divisible(ch, ax.model_size) else None
+            return P(None, batch_spec, None, chspec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def describe_sharding(cfg: ArchConfig, specs: PyTree) -> dict:
+    """Summary stats: how many parameters are sharded vs replicated on model."""
+    flat = jax.tree_util.tree_leaves_with_path(specs)
+    total = len(flat)
+    sharded = sum(1 for _, s in flat if any(a is not None for a in s))
+    return {"leaves": total, "model_sharded": sharded, "replicated": total - sharded}

@@ -1,0 +1,93 @@
+"""Asynchronous SD-FEEL engine tests (Section IV semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncConfig, AsyncSDFEEL, ClusterSpec, make_speeds, psi_constant, ring,
+)
+from repro.core.theory import delta_max
+from repro.data import ClientBatcher, FederatedDataset, mnist_like, iid_partition
+from repro.models import MnistCNN
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = mnist_like(800, seed=1)
+    train, test = data.split(0.8)
+    parts = iid_partition(train.y, 8)
+    ds = FederatedDataset(train, parts)
+    spec = ClusterSpec(8, (0, 0, 1, 1, 2, 2, 3, 3), ds.data_sizes())
+    eval_batch = {"x": test.x[:256], "y": test.y[:256]}
+    return ds, spec, eval_batch
+
+
+def test_speeds_heterogeneity_gap():
+    h = make_speeds(20, 5.0, seed=0)
+    assert np.isclose(h.max() / h.min(), 5.0)
+    assert np.all(make_speeds(10, 1.0) == 1.0)
+
+
+def test_theta_respects_deadline_and_bounds(setup):
+    ds, spec, _ = setup
+    cfg = AsyncConfig(clusters=spec, topology=ring(4),
+                      speeds=make_speeds(8, 4.0, seed=2),
+                      min_batches=3, theta_min=1, theta_max=6)
+    theta = cfg.theta()
+    assert np.all(theta >= 1) and np.all(theta <= 6)
+    # within each cluster the slowest client does exactly min_batches
+    for d in range(4):
+        idx = spec.clients_of(d)
+        slow = np.argmin(cfg.speeds[idx])
+        assert theta[idx][slow] == 3
+
+
+def test_async_runs_and_learns(setup):
+    ds, spec, eval_batch = setup
+    cfg = AsyncConfig(clusters=spec, topology=ring(4),
+                      speeds=make_speeds(8, 4.0, seed=3),
+                      learning_rate=0.05, min_batches=2, theta_max=6)
+    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    batcher = ClientBatcher(ds, 8, seed=0)
+    hist = eng.run(24, batcher, eval_batch, eval_every=12)
+    assert hist.loss[-1] < hist.loss[0] * 1.05
+    assert eng.t == 24
+
+
+def test_iteration_gaps_bounded_by_lemma4(setup):
+    ds, spec, _ = setup
+    cfg = AsyncConfig(clusters=spec, topology=ring(4),
+                      speeds=make_speeds(8, 6.0, seed=4),
+                      min_batches=2, theta_max=8)
+    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    batcher = ClientBatcher(ds, 4, seed=0)
+    bound = delta_max(cfg.iter_times())
+    max_gap = 0
+    for _ in range(30):
+        eng.step(batcher)
+        gaps = eng.t - eng.last_update
+        max_gap = max(max_gap, int(gaps.max()))
+    assert max_gap <= bound + len(cfg.iter_times())  # slack: startup transient
+
+
+def test_vanilla_async_uses_constant_weights(setup):
+    ds, spec, _ = setup
+    cfg = AsyncConfig(clusters=spec, topology=ring(4),
+                      speeds=make_speeds(8, 4.0, seed=5),
+                      psi=psi_constant, min_batches=2)
+    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    batcher = ClientBatcher(ds, 4, seed=0)
+    eng.step(batcher)  # must run without error
+    assert eng.t == 1
+
+
+def test_event_queue_orders_by_speed(setup):
+    """Fast clusters complete more iterations in the same wall-clock."""
+    ds, spec, _ = setup
+    speeds = np.array([1, 1, 1, 1, 4, 4, 4, 4], dtype=float)  # clusters 2,3 fast
+    cfg = AsyncConfig(clusters=spec, topology=ring(4), speeds=speeds, min_batches=2)
+    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    batcher = ClientBatcher(ds, 4, seed=0)
+    counts = np.zeros(4, dtype=int)
+    for _ in range(24):
+        counts[eng.step(batcher)] += 1
+    assert counts[2] + counts[3] > counts[0] + counts[1]

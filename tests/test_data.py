@@ -1,0 +1,52 @@
+"""Federated data pipeline tests."""
+import numpy as np
+
+from repro.data import (
+    SyntheticClassification, mnist_like, cifar_like, iid_partition,
+    skewed_label_partition, dirichlet_partition, FederatedDataset, ClientBatcher,
+)
+from repro.data.partition import partition_stats
+
+
+def test_shapes():
+    d = mnist_like(200)
+    assert d.x.shape == (200, 28, 28, 1)
+    c = cifar_like(100)
+    assert c.x.shape == (100, 32, 32, 3)
+    assert set(np.unique(d.y)) <= set(range(10))
+
+
+def test_partitions_disjoint_and_complete():
+    d = mnist_like(500)
+    for parts in (iid_partition(d.y, 10), dirichlet_partition(d.y, 10, 0.5)):
+        all_idx = np.concatenate(parts)
+        assert len(np.unique(all_idx)) == len(all_idx)  # disjoint
+        assert len(all_idx) >= 0.95 * len(d.y)          # near-complete
+
+
+def test_skewed_label_classes_per_client():
+    d = mnist_like(2000)
+    parts = skewed_label_partition(d.y, 20, classes_per_client=2, seed=3)
+    for p in parts:
+        assert len(np.unique(d.y[p])) <= 2
+        assert len(p) > 0
+
+
+def test_dirichlet_beta_controls_noniidness():
+    d = mnist_like(4000)
+    tv_uniform = partition_stats(d.y, dirichlet_partition(d.y, 20, beta=100.0))["mean_tv_distance"]
+    tv_skewed = partition_stats(d.y, dirichlet_partition(d.y, 20, beta=0.1))["mean_tv_distance"]
+    assert tv_skewed > tv_uniform + 0.2
+
+
+def test_batching():
+    d = mnist_like(400)
+    parts = iid_partition(d.y, 8)
+    ds = FederatedDataset(d, parts)
+    rng = np.random.default_rng(0)
+    b = ds.stacked_batch(16, rng)
+    assert b["x"].shape == (8, 16, 28, 28, 1)
+    assert b["y"].shape == (8, 16)
+    batcher = ClientBatcher(ds, 4)
+    one = batcher.next_batch(3)
+    assert one["x"].shape == (4, 28, 28, 1)

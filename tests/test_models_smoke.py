@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family.
+
+For every arch: instantiate the reduced config (2 scan blocks, d_model<=512,
+<=4 experts), run forward/loss + one SGD train step, prefill, and decode —
+asserting output shapes and finiteness.  Plus decode-vs-forward consistency
+(the KV/SSM cache path must reproduce the full-sequence forward logits).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import CausalLM
+
+
+def make_batch(cfg, b=2, s=64, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        tokens = rng.integers(0, cfg.vocab_size, (b, cfg.num_codebooks, s))
+    else:
+        tokens = rng.integers(0, cfg.vocab_size, (b, s))
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32),
+             "labels": jnp.asarray(tokens, jnp.int32)}
+    if cfg.frontend_tokens:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.frontend_tokens, cfg.d_model)), cfg.param_dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_forward_train_decode(name):
+    cfg = get_config(name).reduced()
+    assert cfg.num_layers == 2 * cfg.scan_period
+    assert cfg.d_model <= 512 and cfg.num_experts <= 4
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+
+    # forward + loss
+    logits, aux = jax.jit(model.forward)(params, batch)
+    v = cfg.padded_vocab
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        assert logits.shape == (2, 64, cfg.num_codebooks, v)
+    else:
+        assert logits.shape == (2, 64, v)
+    assert bool(jnp.isfinite(logits).all())
+
+    # one SGD train step decreases loss on the same batch
+    loss_fn = jax.jit(model.loss)
+    l0 = loss_fn(params, batch)
+    grads = jax.jit(jax.grad(model.loss))(params, batch)
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype), params, grads)
+    l1 = loss_fn(params2, batch)
+    assert bool(jnp.isfinite(l0)) and bool(jnp.isfinite(l1))
+    assert float(l1) < float(l0)
+
+    # prefill + decode shapes
+    last_logits, cache = jax.jit(model.prefill)(params, batch)
+    tok = batch["tokens"][..., -1]
+    dec_logits, new_cache = jax.jit(model.decode_step)(
+        params, tok, cache, jnp.int32(63)
+    )
+    assert bool(jnp.isfinite(dec_logits).all())
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("name", ["granite-8b", "mamba2-780m", "mixtral-8x7b",
+                                  "gemma2-2b", "jamba-1.5-large-398b"])
+def test_decode_matches_forward(name):
+    """Teacher-forced decode through the cache reproduces forward logits."""
+    import dataclasses
+
+    cfg = get_config(name).reduced()
+    if cfg.num_experts:
+        # dropless capacity: token-dropping depends on the co-batched tokens,
+        # which legitimately differs between full-forward and per-token decode.
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.num_experts))
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    s, b = 32, 2
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    full_logits, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+
+    cache = model.init_cache(b, s)
+    step = jax.jit(model.decode_step)
+    errs = []
+    for t in range(s):
+        dec, cache = step(params, tokens[:, t], cache, jnp.int32(t))
+        errs.append(float(jnp.abs(dec[:, 0] - full_logits[:, t]).max()))
+    tol = 2e-2 if cfg.param_dtype == jnp.bfloat16 else 2e-3
+    assert max(errs) < tol, f"max decode-vs-forward err {max(errs)}"
+
+
+def test_long_context_variant_is_subquadratic():
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        if cfg.attn_layer_period:
+            # jamba: full attention in 1/8 layers — decode cost per token is
+            # O(S) (sub-quadratic) and KV memory is sequence-sharded, but the
+            # per-layer window is unbounded; documented in DESIGN.md.
+            continue
+        assert cfg.is_subquadratic(long_context=True), name
+
+
+def test_paper_cnn_param_count():
+    from repro.models import MnistCNN, param_count
+    m = MnistCNN()
+    assert param_count(m.init(jax.random.PRNGKey(0))) == 21840
+
+
+def test_fp8_weight_storage_forward():
+    """fp8 weight storage (bf16 activations) stays finite and correlated."""
+    import dataclasses
+
+    cfg = get_config("granite-8b").reduced()
+    cfg8 = dataclasses.replace(cfg, dtype="float8_e4m3fn", activation_dtype="float32")
+    m, m8 = CausalLM(cfg), CausalLM(cfg8)
+    p = m.init(jax.random.PRNGKey(0))
+    p8 = jax.tree.map(lambda x: x.astype(jnp.float8_e4m3fn) if x.ndim >= 2 else x, p)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 64)))
+    l1, _ = jax.jit(m.forward)(p, {"tokens": tokens})
+    l2, _ = jax.jit(m8.forward)(p8, {"tokens": tokens})
+    assert bool(jnp.isfinite(l2).all())
+    corr = float(jnp.corrcoef(l1.reshape(-1), l2.reshape(-1))[0, 1])
+    assert corr > 0.95, corr

@@ -1,0 +1,43 @@
+"""Optimizer library tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: optim.sgd(0.1),
+    lambda: optim.momentum(0.05),
+    lambda: optim.adam(0.2),
+])
+def test_optimizers_minimize_quadratic(make):
+    opt = make()
+    params = {"w": jnp.zeros(4), "b": jnp.ones(3)}
+    state = opt.init(params)
+    step = jax.jit(lambda p, s: opt.update(p, jax.grad(quad_loss)(p), s))
+    for _ in range(150):
+        params, state = step(params, state)
+    assert quad_loss(params) < 1e-2
+
+
+def test_adam_bf16_state_dtype():
+    opt = optim.adam(0.1, state_dtype=jnp.bfloat16)
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones(4, jnp.bfloat16)}
+    params2, state2 = opt.update(params, grads, state)
+    assert params2["w"].dtype == jnp.bfloat16
+    assert float(params2["w"][0]) < 0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0)}
+    clipped = optim.clip_by_global_norm(g, 1.0)
+    norm = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(norm) == pytest.approx(1.0, rel=1e-5)

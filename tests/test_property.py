@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the protocol's algebraic invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClusterSpec, SDFEELConfig, transition_matrix, mixing_matrix, zeta,
+    staleness_mixing_matrix, psi_inverse,
+)
+from repro.core.topology import Topology, ring, TOPOLOGIES
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@st.composite
+def connected_graph(draw, max_d=8):
+    d = draw(st.integers(3, max_d))
+    a = np.zeros((d, d), dtype=np.int64)
+    # random spanning tree guarantees connectivity
+    for i in range(1, d):
+        j = draw(st.integers(0, i - 1))
+        a[i, j] = a[j, i] = 1
+    # random extra edges
+    extra = draw(st.lists(st.tuples(st.integers(0, d - 1), st.integers(0, d - 1)),
+                          max_size=d))
+    for i, j in extra:
+        if i != j:
+            a[i, j] = a[j, i] = 1
+    return Topology("random", d, a)
+
+
+@st.composite
+def cluster_spec(draw, num_clusters):
+    sizes_per = draw(st.lists(st.integers(1, 4), min_size=num_clusters,
+                              max_size=num_clusters))
+    assign, data = [], []
+    for d, n in enumerate(sizes_per):
+        assign += [d] * n
+        data += [draw(st.floats(0.5, 4.0)) for _ in range(n)]
+    return ClusterSpec(len(assign), tuple(assign), tuple(data))
+
+
+@given(connected_graph(), st.data())
+@settings(**SETTINGS)
+def test_mixing_matrix_invariants(topo, data):
+    ratios = np.array([data.draw(st.floats(0.2, 3.0)) for _ in range(topo.num_servers)])
+    ratios = ratios / ratios.sum()
+    p = mixing_matrix(topo, ratios)
+    # mass preservation + weighted fixed point + spectral contraction
+    np.testing.assert_allclose(p.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(p @ ratios, ratios, atol=1e-9)
+    assert zeta(p, ratios) < 1.0 - 1e-9
+
+
+@given(connected_graph(max_d=6), st.data())
+@settings(**SETTINGS)
+def test_transition_preserves_global_weighted_mean(topo, data):
+    spec = data.draw(cluster_spec(topo.num_servers))
+    cfg = SDFEELConfig(clusters=spec, topology=topo,
+                       tau1=data.draw(st.integers(1, 4)),
+                       tau2=data.draw(st.integers(1, 3)),
+                       alpha=data.draw(st.integers(1, 3)))
+    m = spec.m()
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(3, spec.num_clients))
+    for event in ("local", "intra", "inter"):
+        t = transition_matrix(cfg, event)
+        np.testing.assert_allclose((w @ t) @ m, w @ m, atol=1e-8)
+
+
+@given(connected_graph(max_d=7), st.data())
+@settings(**SETTINGS)
+def test_staleness_matrix_doubly_stochastic(topo, data):
+    trigger = data.draw(st.integers(0, topo.num_servers - 1))
+    gaps = np.array([data.draw(st.integers(0, 20)) for _ in range(topo.num_servers)],
+                    dtype=float)
+    gaps[trigger] = 0.0
+    p = staleness_mixing_matrix(topo, trigger, gaps, psi_inverse)
+    np.testing.assert_allclose(p.sum(axis=0), 1.0, atol=1e-10)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-10)
+    assert np.all(p >= -1e-12)
+    # uniform average is preserved (Theorem 2's invariant)
+    y = np.random.default_rng(1).normal(size=(4, topo.num_servers))
+    np.testing.assert_allclose((y @ p).mean(axis=1), y.mean(axis=1), atol=1e-9)
+
+
+@given(st.integers(2, 6), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_gossip_contraction_monotone_in_alpha(d_half, alpha):
+    """Consensus error after alpha rounds <= zeta^alpha * initial error."""
+    d = 2 * d_half
+    topo = ring(d)
+    p = mixing_matrix(topo)
+    z = zeta(p)
+    rng = np.random.default_rng(d * 7 + alpha)
+    y = rng.normal(size=(d, 3))
+    mean = y.mean(axis=0, keepdims=True)
+    y0_err = np.linalg.norm(y - mean)
+    ya = np.linalg.matrix_power(p.T, alpha) @ y
+    err = np.linalg.norm(ya - mean)
+    assert err <= z**alpha * y0_err + 1e-9
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_partition_sizes_and_disjoint(data):
+    from repro.data import dirichlet_partition
+
+    n = data.draw(st.integers(200, 600))
+    clients = data.draw(st.integers(2, 12))
+    beta = data.draw(st.floats(0.1, 10.0))
+    labels = np.random.default_rng(n).integers(0, 10, n)
+    parts = dirichlet_partition(labels, clients, beta, seed=n)
+    idx = np.concatenate(parts)
+    assert len(np.unique(idx)) == len(idx)
+    assert all(len(p) >= 1 for p in parts)

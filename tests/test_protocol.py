@@ -1,0 +1,81 @@
+"""ClusterSpec / Lemma-1 transition matrix tests."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, SDFEELConfig, transition_matrix, ring, fully_connected
+
+
+def make_cfg(c=12, d=4, tau1=2, tau2=2, alpha=1, sizes=None, topo=None):
+    sizes = sizes or tuple(1.0 for _ in range(c))
+    spec = ClusterSpec(c, tuple(i * d // c for i in range(c)), sizes)
+    return SDFEELConfig(
+        clusters=spec, topology=(topo or ring)(d), tau1=tau1, tau2=tau2, alpha=alpha
+    )
+
+
+def test_ratios_sum():
+    rng = np.random.default_rng(0)
+    sizes = tuple(rng.uniform(1, 5, 12))
+    cfg = make_cfg(sizes=sizes)
+    s = cfg.clusters
+    np.testing.assert_allclose(s.m().sum(), 1.0)
+    np.testing.assert_allclose(s.m_tilde().sum(), 1.0)
+    # m^ sums to 1 within each cluster
+    mh = s.m_hat()
+    for d in range(s.num_clusters):
+        idx = s.clients_of(d)
+        np.testing.assert_allclose(mh[idx].sum(), 1.0)
+    # m_i = m^_i * m~_{d(i)}
+    np.testing.assert_allclose(s.m(), mh * s.m_tilde()[list(s.assignments)])
+
+
+def test_event_schedule():
+    cfg = make_cfg(tau1=2, tau2=3)
+    events = [cfg.event_at(k) for k in range(1, 13)]
+    assert events == ["local", "intra", "local", "intra", "local", "inter"] * 2
+
+
+@pytest.mark.parametrize("event", ["local", "intra", "inter"])
+def test_transition_preserves_weighted_mean(event):
+    """T_k m = m: the auxiliary global model u_k = W m is invariant (eq. 12)."""
+    rng = np.random.default_rng(1)
+    sizes = tuple(rng.uniform(1, 3, 12))
+    cfg = make_cfg(sizes=sizes, alpha=2)
+    t = transition_matrix(cfg, event)
+    m = cfg.clusters.m()
+    np.testing.assert_allclose(t @ m, m, atol=1e-10)
+    # mass preservation: columns sum to 1
+    np.testing.assert_allclose(t.sum(axis=0), 1.0, atol=1e-10)
+
+
+def test_intra_is_block_weighted_average():
+    cfg = make_cfg(c=8, d=2)
+    t = transition_matrix(cfg, "intra")
+    w = np.arange(8, dtype=np.float64)[None, :]  # fake 1-dim models
+    out = w @ t
+    # cluster 0 = clients 0..3 mean 1.5; cluster 1 = 4..7 mean 5.5
+    np.testing.assert_allclose(out[0, :4], 1.5)
+    np.testing.assert_allclose(out[0, 4:], 5.5)
+
+
+def test_inter_fully_connected_alpha1_is_global_mean():
+    """zeta = 0 (fully connected): one gossip round reaches perfect consensus."""
+    cfg = make_cfg(c=12, d=4, topo=fully_connected, alpha=1)
+    t = transition_matrix(cfg, "inter")
+    w = np.arange(12, dtype=np.float64)[None, :]
+    out = w @ t
+    np.testing.assert_allclose(out, w.mean(), atol=1e-8)
+
+
+def test_imbalanced_clusters():
+    spec = ClusterSpec.imbalanced(10, base=5, gamma=2)
+    sizes = np.bincount(spec.assignments)
+    assert sorted(sizes.tolist()) == sorted([5] * 4 + [3] * 3 + [7] * 3)
+    with pytest.raises(ValueError):
+        ClusterSpec.imbalanced(10, base=5, gamma=5)
+
+
+def test_cluster_topology_size_mismatch_raises():
+    spec = ClusterSpec.uniform(12, 4)
+    with pytest.raises(ValueError):
+        SDFEELConfig(clusters=spec, topology=ring(5))

@@ -1,0 +1,65 @@
+"""Whole-round engine == per-iteration engine, bit-for-bit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import FLSpec, build_fl_train_step, init_stacked
+from repro.core.round_engine import build_fl_round_step
+from repro.data import FederatedDataset, iid_partition, mnist_like
+from repro.models import MnistCNN
+
+
+def test_round_equals_iterated_steps():
+    model = MnistCNN()
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=2, tau2=2, alpha=2,
+                learning_rate=0.05)
+    data = mnist_like(400, seed=3)
+    parts = iid_partition(data.y, 8)
+    ds = FederatedDataset(data, parts)
+    rng = np.random.default_rng(3)
+    n_iters = fl.tau1 * fl.tau2
+    batches = [ds.stacked_batch(4, rng) for _ in range(n_iters)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches)
+
+    params0 = init_stacked(model, 8, jax.random.PRNGKey(1))
+    opt = optim.sgd(fl.learning_rate)
+
+    # per-iteration path (Algorithm-1 schedule)
+    proto = fl.protocol()
+    steps = {ev: jax.jit(build_fl_train_step(model, opt, fl, event=ev))
+             for ev in ("local", "intra", "inter")}
+    p_iter, s_iter = params0, ()
+    losses_iter = []
+    for k in range(1, n_iters + 1):
+        b = jax.tree.map(jnp.asarray, batches[k - 1])
+        p_iter, s_iter, loss = steps[proto.event_at(k)](p_iter, s_iter, b)
+        losses_iter.append(float(loss))
+
+    # whole-round path
+    round_step = jax.jit(build_fl_round_step(model, opt, fl))
+    p_round, _, losses_round = round_step(params0, (), stacked)
+
+    np.testing.assert_allclose(np.asarray(losses_round), losses_iter, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_iter), jax.tree.leaves(p_round)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+def test_round_engine_trains():
+    model = MnistCNN()
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=2, tau2=1, alpha=1,
+                learning_rate=0.05)
+    data = mnist_like(400, seed=4)
+    parts = iid_partition(data.y, 8)
+    ds = FederatedDataset(data, parts)
+    rng = np.random.default_rng(4)
+    round_step = jax.jit(build_fl_round_step(model, optim.sgd(0.05), fl))
+    params, opt_state = init_stacked(model, 8, jax.random.PRNGKey(2)), ()
+    first = last = None
+    for _ in range(10):
+        batches = [ds.stacked_batch(8, rng) for _ in range(fl.tau1 * fl.tau2)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches)
+        params, opt_state, losses = round_step(params, opt_state, stacked)
+        first = float(losses[0]) if first is None else first
+        last = float(losses[-1])
+    assert last < first

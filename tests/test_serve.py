@@ -1,0 +1,77 @@
+"""Serving loop tests: prefill -> grow cache -> autoregressive decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import generate, grow_caches
+from repro.models import CausalLM
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_config("granite-8b").reduced()
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32)
+    out1 = generate(model, params, prompts, 8)
+    out2 = generate(model, params, prompts, 8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 8)
+    assert int(out1.max()) < cfg.vocab_size
+
+
+def test_generate_matches_forward_teacher_forcing():
+    """Greedy continuation equals argmax over the full-forward logits."""
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    s = 64
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s)), jnp.int32)
+    out = generate(model, params, prompts, 1)
+    full_logits, _ = jax.jit(model.forward)(params, {"tokens": prompts})
+    expected = jnp.argmax(full_logits[:, -1, : cfg.vocab_size], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(expected))
+
+
+def test_sliding_window_ring_buffer_eviction():
+    """mixtral's window cache keeps only the last `window` positions."""
+    cfg = get_config("mixtral-8x7b").reduced()  # window = 64
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    cache = model.init_cache(1, 256)
+    assert cache["pos0"]["k"].shape[2] == 64  # ring buffer = window
+    step = jax.jit(model.decode_step)
+    tok = jnp.zeros((1,), jnp.int32)
+    c = cache
+    for t in range(70):
+        _, c = step(params, tok, c, jnp.int32(t))
+    pos = np.asarray(c["pos0"]["pos"][0])
+    assert pos.min() == 70 - 64 and pos.max() == 69  # oldest evicted
+
+
+def test_grow_caches_pads_full_attention_only():
+    cfg = get_config("gemma2-2b").reduced()  # local(64)/global alternating
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 64)), jnp.int32)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": prompts})
+    grown = grow_caches(model, cache, 96)
+    assert grown["pos0"]["k"].shape[2] == 64   # local layer: ring stays
+    assert grown["pos1"]["k"].shape[2] == 96   # global layer: padded
+    assert int(grown["pos1"]["pos"][0, -1]) == -1
+
+
+def test_audio_generate_codebooks():
+    cfg = get_config("musicgen-large").reduced()
+    model = CausalLM(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, cfg.num_codebooks, 32)), jnp.int32
+    )
+    out = generate(model, params, prompts, 4)
+    assert out.shape == (2, 4, cfg.num_codebooks)

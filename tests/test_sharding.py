@@ -1,0 +1,116 @@
+"""Sharding-rule unit tests (no multi-device required)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import CausalLM
+from repro.sharding import MeshAxes, batch_pspecs, param_pspecs, describe_sharding
+
+AX = MeshAxes(model="model", data="data", pod=None, model_size=16)
+AX_POD = MeshAxes(model="model", data="data", pod="pod", model_size=16)
+
+
+def specs_for(name, client_axis=None):
+    cfg = get_config(name)
+    model = CausalLM(cfg)
+    shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if client_axis:
+        shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((4,) + s.shape, s.dtype), shape
+        )
+    return cfg, shape, param_pspecs(cfg, shape, AX, client_axis=client_axis)
+
+
+def leaf(specs, *path):
+    node = specs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_dense_megatron_rules():
+    cfg, shape, specs = specs_for("granite-8b")
+    assert leaf(specs, "embed") == P("model", None)
+    assert leaf(specs, "head") == P(None, "model")
+    blk = specs["blocks"]["pos0"]
+    assert blk["attn"]["wq"] == P(None, None, "model")      # (scan, d, H*hd)
+    assert blk["attn"]["wo"] == P(None, "model", None)
+    assert blk["attn"]["wk"] == P(None, None, None)         # kv replicated
+    assert blk["ffn"]["w_gate"] == P(None, None, "model")
+    assert blk["ffn"]["w_down"] == P(None, "model", None)
+    assert blk["ln_mix"] == P(None, None)
+
+
+def test_gemma2_heads_not_shardable():
+    """8 query heads % 16-way model axis != 0 -> attention replicated."""
+    cfg, shape, specs = specs_for("gemma2-2b")
+    blk = specs["blocks"]["pos0"]
+    assert blk["attn"]["wq"] == P(None, None, None)
+    assert blk["attn"]["wo"] == P(None, None, None)
+    # but FFN and (tied) vocab still shard
+    assert blk["ffn"]["w_gate"] == P(None, None, "model")
+    assert specs["embed"] == P("model", None)
+
+
+def test_moe_expert_ffn_sharding():
+    cfg, shape, specs = specs_for("mixtral-8x7b")
+    blk = specs["blocks"]["pos0"]
+    assert blk["ffn"]["w_gate"] == P(None, None, None, "model")   # (scan,E,d,f)
+    assert blk["ffn"]["w_down"] == P(None, None, "model", None)
+    assert blk["ffn"]["w_router"] == P(None, None, None)
+
+
+def test_mamba_stream_sharding():
+    cfg, shape, specs = specs_for("mamba2-780m")
+    blk = specs["blocks"]["pos0"]["mamba"]
+    assert blk["w_x"] == P(None, None, "model")
+    assert blk["w_z"] == P(None, None, "model")
+    assert blk["out_proj"] == P(None, "model", None)
+    assert blk["w_b"] == P(None, None, None)     # small streams replicated
+    assert blk["conv_x"] == P(None, None, "model")
+    assert blk["A_log"] == P(None, None)
+
+
+def test_audio_codebook_sharding():
+    cfg, shape, specs = specs_for("musicgen-large")
+    assert leaf(specs, "embed") == P(None, "model", None)   # (K, V, d)
+    assert leaf(specs, "head") == P(None, None, "model")    # (K, d, V)
+
+
+def test_client_axis_prepended():
+    cfg, shape, specs = specs_for("qwen2.5-3b", client_axis="data")
+    assert leaf(specs, "embed") == P("data", "model", None)
+    assert specs["blocks"]["pos0"]["attn"]["wq"] == P("data", None, None, "model")
+
+
+def test_batch_specs_federated_and_decode():
+    cfg = get_config("qwen2.5-3b")
+    shapes = {"tokens": jax.ShapeDtypeStruct((16, 16, 4096), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((16, 16, 4096), jnp.int32)}
+    specs = batch_pspecs(cfg, shapes, AX_POD, "train", federated=True)
+    assert specs["tokens"] == P("data", "pod", None)
+    dec = batch_pspecs(cfg, {"token": jax.ShapeDtypeStruct((128,), jnp.int32),
+                             "pos": jax.ShapeDtypeStruct((), jnp.int32)},
+                       AX, "decode", batch_div=16)
+    assert dec["token"] == P("data")
+    assert dec["pos"] == P()
+    # batch of 1 not divisible -> replicated
+    dec1 = batch_pspecs(cfg, {"token": jax.ShapeDtypeStruct((1,), jnp.int32)},
+                        AX, "decode", batch_div=16)
+    assert dec1["token"] == P(None)
+
+
+def test_every_arch_has_sharded_majority_of_bytes():
+    """The big weights must be model-sharded for every assigned arch."""
+    for name in ("grok-1-314b", "jamba-1.5-large-398b", "command-r-35b"):
+        cfg, shape, specs = specs_for(name)
+        flat_shapes = jax.tree.leaves(shape)
+        flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        sharded_bytes = sum(
+            s.size for s, sp in zip(flat_shapes, flat_specs)
+            if any(a is not None for a in sp)
+        )
+        total = sum(s.size for s in flat_shapes)
+        assert sharded_bytes / total > 0.9, name

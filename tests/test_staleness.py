@@ -1,0 +1,53 @@
+"""Staleness-aware mixing (eq. 22) tests."""
+import numpy as np
+import pytest
+
+from repro.core import ring, chain, staleness_mixing_matrix, psi_inverse, psi_constant
+
+
+def test_paper_example_matrix():
+    """Three clusters in a chain; cluster 0 triggers with gap(1) = 2."""
+    topo = chain(3)
+    p = staleness_mixing_matrix(topo, trigger=0, gaps=[0.0, 2.0, 5.0], psi=psi_inverse)
+    psi0, psi2 = 1 / 2, 1 / 6
+    big = psi0 + psi2
+    # paper convention (eq. 21): P[j', j] = weight of cluster j' in cluster j
+    expected = np.array([
+        [psi0 / big, psi2 / big, 0.0],
+        [psi2 / big, 1 - psi2 / big, 0.0],
+        [0.0, 0.0, 1.0],
+    ])
+    np.testing.assert_allclose(p, expected, atol=1e-12)
+
+
+@pytest.mark.parametrize("trigger", [0, 2, 5])
+def test_doubly_stochastic(trigger):
+    topo = ring(6)
+    rng = np.random.default_rng(trigger)
+    gaps = rng.integers(0, 10, 6).astype(float)
+    gaps[trigger] = 0.0
+    p = staleness_mixing_matrix(topo, trigger, gaps)
+    np.testing.assert_allclose(p.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-12)
+    assert np.all(p >= -1e-12)
+
+
+def test_staler_neighbor_weighs_less():
+    topo = ring(6)
+    p_fresh = staleness_mixing_matrix(topo, 0, [0, 1, 0, 0, 0, 1])
+    p_stale = staleness_mixing_matrix(topo, 0, [0, 9, 0, 0, 0, 1])
+    # neighbor 1's contribution to trigger's new model drops with staleness
+    assert p_stale[1, 0] < p_fresh[1, 0]
+    # constant psi ignores staleness (vanilla async baseline)
+    pc_fresh = staleness_mixing_matrix(topo, 0, [0, 1, 0, 0, 0, 1], psi_constant)
+    pc_stale = staleness_mixing_matrix(topo, 0, [0, 9, 0, 0, 0, 1], psi_constant)
+    np.testing.assert_allclose(pc_fresh, pc_stale)
+
+
+def test_non_neighbors_untouched():
+    topo = ring(6)
+    p = staleness_mixing_matrix(topo, 0, np.zeros(6))
+    for j in (2, 3, 4):
+        col = np.zeros(6)
+        col[j] = 1.0
+        np.testing.assert_allclose(p[:, j], col)

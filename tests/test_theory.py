@@ -1,0 +1,65 @@
+"""Theorem 1 / 2 numeric-bound tests (Remark 1 & 2 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.topology import ring, fully_connected, mixing_matrix, zeta
+
+
+COMMON = dict(eta=1e-3, L=1.0, sigma2=1.0, kappa2=1.0, m=np.full(50, 0.02))
+
+
+def test_phi_increases_with_tau1_tau2():
+    """Remark 1: Phi grows with both aggregation periods."""
+    base = theory.theorem1_terms(2, 2, 1, 0.6, **COMMON).Phi
+    assert theory.theorem1_terms(4, 2, 1, 0.6, **COMMON).Phi > base
+    assert theory.theorem1_terms(2, 4, 1, 0.6, **COMMON).Phi > base
+
+
+def test_phi_increases_with_zeta_decreases_with_alpha():
+    """Remark 2: sparser graphs (larger zeta) hurt; more gossip rounds help."""
+    base = theory.theorem1_terms(2, 2, 1, 0.6, **COMMON).Phi
+    assert theory.theorem1_terms(2, 2, 1, 0.71, **COMMON).Phi > base
+    assert theory.theorem1_terms(2, 2, 4, 0.6, **COMMON).Phi < base
+    # diminishing returns in alpha
+    d1 = base - theory.theorem1_terms(2, 2, 2, 0.6, **COMMON).Phi
+    d2 = (theory.theorem1_terms(2, 2, 4, 0.6, **COMMON).Phi
+          - theory.theorem1_terms(2, 2, 8, 0.6, **COMMON).Phi)
+    assert d1 > d2 >= 0
+
+
+def test_hierfavg_limit():
+    """Remark 3: zeta^alpha -> 0 recovers the HierFAVG bound (only the
+    tau-driven local-drift variance remains)."""
+    t_sd = theory.theorem1_terms(2, 2, 64, 0.6, **COMMON)   # zeta^64 ~ 0
+    t_perfect = theory.theorem1_terms(2, 2, 1, 0.0, **COMMON)
+    assert t_sd.Phi == pytest.approx(t_perfect.Phi, rel=1e-6)
+
+
+def test_bound_decreases_with_k():
+    b1 = theory.theorem1_bound(K=100, delta=1.0, tau1=2, tau2=1, alpha=1, zeta=0.6, **COMMON)
+    b2 = theory.theorem1_bound(K=10_000, delta=1.0, tau1=2, tau2=1, alpha=1, zeta=0.6, **COMMON)
+    assert b2 < b1
+
+
+def test_max_learning_rate_shrinks_with_tau():
+    lr_small = theory.max_learning_rate(2, 1, 1, 0.6, L=1.0)
+    lr_large = theory.max_learning_rate(20, 1, 1, 0.6, L=1.0)
+    assert 0 < lr_large < lr_small <= 1.0
+
+
+def test_delta_max_lemma4():
+    # equal speeds: no gap; 2x spread: slowest waits while others finish extra iters
+    assert theory.delta_max(np.array([1.0, 1.0, 1.0])) == 0
+    dm = theory.delta_max(np.array([1.0, 2.0, 4.0]))
+    assert dm == (np.ceil(4 / 1) - 1) + (np.ceil(4 / 2) - 1)
+
+
+def test_theorem2_lr_condition():
+    assert theory.theorem2_learning_rate_ok(1e-4, L=1.0, theta_min=1, theta_max=8, dmax=4)
+    assert not theory.theorem2_learning_rate_ok(0.5, L=1.0, theta_min=1, theta_max=8, dmax=4)
+
+
+def test_zeta_matches_fig3_values():
+    assert zeta(mixing_matrix(ring(6))) == pytest.approx(0.6, abs=0.02)
+    assert zeta(mixing_matrix(fully_connected(6))) == pytest.approx(0.0, abs=1e-8)

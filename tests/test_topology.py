@@ -1,0 +1,69 @@
+"""Topology / mixing-matrix (eq. 5) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+def test_constructors_connected():
+    for topo in [T.ring(6), T.star(6), T.fully_connected(6), T.chain(5),
+                 T.partially_connected(6), T.torus_2d(3, 4)]:
+        assert topo.is_connected()
+        a = topo.adjacency
+        assert np.array_equal(a, a.T)
+        assert np.all(np.diag(a) == 0)
+
+
+def test_ring_degrees():
+    topo = T.ring(6)
+    assert np.all(topo.degree() == 2)
+    assert list(topo.neighbors(0)) == [1, 5]
+
+
+def test_mixing_matrix_mass_and_fixed_point():
+    """1^T P = 1^T (mass preservation) and P m~ = m~ (weighted-mean fixed pt)."""
+    rng = np.random.default_rng(0)
+    for make in (T.ring, T.star, T.fully_connected):
+        topo = make(6)
+        m = rng.uniform(0.5, 2.0, 6)
+        m = m / m.sum()
+        p = T.mixing_matrix(topo, m)
+        np.testing.assert_allclose(p.sum(axis=0), 1.0, atol=1e-10)
+        np.testing.assert_allclose(p @ m, m, atol=1e-10)
+
+
+def test_zeta_orderings_match_fig3():
+    """Fig. 3: star (0.71) > ring (0.6) > partial > fully-connected (0)."""
+    z = {name: T.zeta(T.mixing_matrix(make(6))) for name, make in
+         [("star", T.star), ("ring", T.ring), ("full", T.fully_connected)]}
+    assert z["star"] == pytest.approx(0.714, abs=0.02)
+    assert z["ring"] == pytest.approx(0.6, abs=0.02)
+    assert z["full"] == pytest.approx(0.0, abs=1e-8)
+    zp = T.zeta(T.mixing_matrix(T.partially_connected(6, extra_edges=3, seed=1)))
+    assert z["full"] < zp < z["star"]
+
+
+def test_gossip_converges_to_weighted_mean():
+    """P^alpha Y -> weighted mean as alpha grows; rate ~ zeta^alpha."""
+    rng = np.random.default_rng(1)
+    topo = T.ring(8)
+    m = rng.uniform(0.5, 1.5, 8)
+    m = m / m.sum()
+    p = T.mixing_matrix(topo, m)
+    y = rng.normal(size=(8, 5))
+    target = (m @ y)[None, :].repeat(8, axis=0)
+    prev_err = np.inf
+    for alpha in (1, 4, 16, 64):
+        ya = np.linalg.matrix_power(p.T, alpha) @ y
+        err = np.abs(ya - target).max()
+        assert err < prev_err or err < 1e-10
+        prev_err = err
+    assert prev_err < 1e-6
+
+
+def test_disconnected_raises():
+    a = np.zeros((4, 4), dtype=np.int64)
+    a[0, 1] = a[1, 0] = 1
+    a[2, 3] = a[3, 2] = 1
+    with pytest.raises(ValueError):
+        T.Topology("two_islands", 4, a)
