@@ -52,17 +52,9 @@ def main():
     res = {}
     wire = {"ring": 2, "torus_2d": 4, "fully_connected": d - 1}
     for name in topos:
-        sim = make_sdfeel(ds, tau1=5, tau2=2, alpha=1, n_clusters=d, seed=11)
-        # swap the topology (make_sdfeel builds ring by default)
-        from repro.core import SDFEELConfig
-        sim_cfg = SDFEELConfig(
-            clusters=sim.cfg.clusters, topology=topos[name],
-            tau1=5, tau2=2, alpha=1, learning_rate=0.05,
-        )
-        from repro.core import SDFEELSimulator
-        from repro.models import MnistCNN
-        from repro.core.latency import MNIST_LATENCY
-        sim = SDFEELSimulator(MnistCNN(), sim_cfg, latency=MNIST_LATENCY, seed=11)
+        # make_sdfeel accepts a Topology instance directly (scenario factory)
+        sim = make_sdfeel(ds, topology=topos[name], tau1=5, tau2=2, alpha=1,
+                          n_clusters=d, seed=11)
         h = run_history(sim, ds, eval_batch=eval_batch, seed=11)
         res[name] = h.loss[-1]
         emit("beyond_torus", name, d, "final_loss", res[name])

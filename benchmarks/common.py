@@ -11,10 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    ClusterSpec, MNIST_LATENCY, SDFEELConfig, SDFEELSimulator,
-)
-from repro.core.topology import TOPOLOGIES
+from repro.core import ClusterSpec, FederationRuntime, MNIST_LATENCY, make_run
 from repro.data import FederatedDataset, mnist_like, skewed_label_partition, dirichlet_partition
 from repro.models import MnistCNN
 
@@ -65,16 +62,21 @@ def make_env(noniid="label_skew", classes_per_client=2, beta=0.5, seed=0,
 
 def make_sdfeel(ds, *, topology="ring", tau1=5, tau2=1, alpha=1, lr=0.05,
                 n_clusters=None, latency=MNIST_LATENCY, seed=0,
-                assignments=None) -> SDFEELSimulator:
+                assignments=None) -> FederationRuntime:
     n_clusters = n_clusters or N_CLUSTERS
     c = ds.num_clients
     assign = assignments or tuple(i * n_clusters // c for i in range(c))
     spec = ClusterSpec(c, tuple(assign), ds.data_sizes())
-    cfg = SDFEELConfig(
-        clusters=spec, topology=TOPOLOGIES[topology](n_clusters),
-        tau1=tau1, tau2=tau2, alpha=alpha, learning_rate=lr,
-    )
-    return SDFEELSimulator(MnistCNN(), cfg, latency=latency, seed=seed)
+    return make_run({
+        "scheduler": "sync",
+        "model": MnistCNN(),
+        "clusters": spec,
+        "topology": topology,
+        "tau1": tau1, "tau2": tau2, "alpha": alpha,
+        "learning_rate": lr,
+        "latency": latency,
+        "seed": seed,
+    })
 
 
 def run_history(sim_or_trainer, ds, iters=None, seed=0, eval_batch=None, eval_every=None):

@@ -8,8 +8,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import (
-    AsyncConfig, AsyncSDFEEL, ClusterSpec, FedAvgTrainer, FEELTrainer,
-    HierFAVGTrainer, MNIST_LATENCY, make_speeds, psi_constant, psi_inverse, ring,
+    ClusterSpec, FedAvgTrainer, FEELTrainer, HierFAVGTrainer, MNIST_LATENCY,
+    make_run, make_speeds,
 )
 from repro.core.latency import LatencyModel
 from repro.data import ClientBatcher
@@ -156,12 +156,13 @@ def fig10_async():
         iters = common.ITERS // 2
         h_sync = run_history(sd, ds, iters=iters, eval_batch=eval_batch, seed=5)
         # --- async (staleness-aware) and vanilla (constant psi)
-        for name, psi in (("async", psi_inverse), ("vanilla", psi_constant)):
-            cfg = AsyncConfig(clusters=spec, topology=ring(common.N_CLUSTERS),
-                              speeds=speeds, learning_rate=0.05,
-                              min_batches=2, theta_max=8, psi=psi,
-                              alpha_latency=MNIST_LATENCY)
-            eng = AsyncSDFEEL(MnistCNN(), cfg, seed=5)
+        for name, psi in (("async", "staleness"), ("vanilla", "constant")):
+            eng = make_run({
+                "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+                "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+                "min_batches": 2, "theta_max": 8, "psi": psi,
+                "latency": MNIST_LATENCY, "seed": 5,
+            })
             batcher = ClientBatcher(ds, common.BATCH, seed=5)
             h = eng.run(iters, batcher, eval_batch, eval_every=max(5, iters // 6))
             res[(name, H)] = h

@@ -3,16 +3,14 @@
     PYTHONPATH=src python examples/async_heterogeneous.py [--H 10]
 
 Compares synchronous SD-FEEL, vanilla async (constant mixing), and the
-staleness-aware async algorithm at heterogeneity gap H.
+staleness-aware async algorithm at heterogeneity gap H.  Both regimes run
+through the unified ``FederationRuntime`` — only the scheduler differs.
 """
 import argparse
 
 import numpy as np
 
-from repro.core import (
-    AsyncConfig, AsyncSDFEEL, ClusterSpec, MNIST_LATENCY, SDFEELConfig,
-    SDFEELSimulator, make_speeds, psi_constant, psi_inverse, ring,
-)
+from repro.core import ClusterSpec, MNIST_LATENCY, make_run, make_speeds
 from repro.data import ClientBatcher, FederatedDataset, mnist_like, skewed_label_partition
 from repro.models import MnistCNN
 
@@ -33,22 +31,26 @@ speeds = make_speeds(CLIENTS, args.H, seed=1)
 print(f"device heterogeneity H = {speeds.max() / speeds.min():.1f}")
 
 # synchronous baseline (slowest client paces every iteration)
-sync_cfg = SDFEELConfig(clusters=spec, topology=ring(CLUSTERS), tau1=2, tau2=1,
-                        alpha=1, learning_rate=0.05)
-sync = SDFEELSimulator(MnistCNN(), sync_cfg, latency=MNIST_LATENCY, seed=0)
+sync = make_run({
+    "scheduler": "sync", "model": MnistCNN(), "clusters": spec, "topology": "ring",
+    "tau1": 2, "tau2": 1, "alpha": 1, "learning_rate": 0.05,
+    "latency": MNIST_LATENCY, "seed": 0,
+})
 rng = np.random.default_rng(0)
 h_sync = sync.run(args.events, lambda k: ds.stacked_batch(10, rng), eval_batch,
                   eval_every=args.events)
 
-for name, psi in (("vanilla-async", psi_constant), ("staleness-aware", psi_inverse)):
-    cfg = AsyncConfig(clusters=spec, topology=ring(CLUSTERS), speeds=speeds,
-                      learning_rate=0.05, min_batches=2, theta_max=8, psi=psi,
-                      alpha_latency=MNIST_LATENCY)
-    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+for name, psi in (("vanilla-async", "constant"), ("staleness-aware", "staleness")):
+    runtime = make_run({
+        "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+        "min_batches": 2, "theta_max": 8, "psi": psi,
+        "latency": MNIST_LATENCY, "seed": 0,
+    })
     batcher = ClientBatcher(ds, 10, seed=0)
-    h = eng.run(args.events, batcher, eval_batch, eval_every=args.events)
+    h = runtime.run(args.events, batcher, eval_batch, eval_every=args.events)
     print(f"{name:18s}: acc={h.accuracy[-1]:.3f} loss={h.loss[-1]:.4f} "
-          f"wallclock={h.wallclock[-1]:.1f}s (gaps bounded, t={eng.t})")
+          f"wallclock={h.wallclock[-1]:.1f}s (gaps bounded, t={runtime.scheduler.t})")
 
 print(f"{'synchronous':18s}: acc={h_sync.accuracy[-1]:.3f} loss={h_sync.loss[-1]:.4f} "
       f"wallclock={h_sync.wallclock[-1]:.1f}s")

@@ -3,11 +3,12 @@
     PYTHONPATH=src python examples/quickstart.py
 
 50 clients / 10 edge servers on a ring (the paper's §V-A layout), skewed
-non-IID labels (2 classes per client), tau1=5, tau2=1, alpha=1.
+non-IID labels (2 classes per client), tau1=5, tau2=1, alpha=1.  The run is
+constructed through the unified ``FederationRuntime`` scenario factory.
 """
 import numpy as np
 
-from repro.core import ClusterSpec, MNIST_LATENCY, SDFEELConfig, SDFEELSimulator, ring
+from repro.core import ClusterSpec, MNIST_LATENCY, make_run
 from repro.data import FederatedDataset, mnist_like, skewed_label_partition
 from repro.models import MnistCNN
 
@@ -18,18 +19,23 @@ train, test = data.split(0.85)
 parts = skewed_label_partition(train.y, CLIENTS, classes_per_client=2, seed=0)
 ds = FederatedDataset(train, parts)
 
-cfg = SDFEELConfig(
-    clusters=ClusterSpec(CLIENTS, tuple(i * CLUSTERS // CLIENTS for i in range(CLIENTS)),
-                         ds.data_sizes()),
-    topology=ring(CLUSTERS),
-    tau1=5, tau2=1, alpha=1, learning_rate=0.05,
-)
+runtime = make_run({
+    "scheduler": "sync",
+    "model": MnistCNN(),
+    "clusters": ClusterSpec(CLIENTS, tuple(i * CLUSTERS // CLIENTS for i in range(CLIENTS)),
+                            ds.data_sizes()),
+    "topology": "ring",
+    "tau1": 5, "tau2": 1, "alpha": 1,
+    "learning_rate": 0.05,
+    "latency": MNIST_LATENCY,
+    "seed": 0,
+})
+cfg = runtime.scheduler.cfg
 print(f"SD-FEEL: {CLIENTS} clients, {CLUSTERS} edge servers (ring, zeta={cfg.zeta():.3f})")
 
-sim = SDFEELSimulator(MnistCNN(), cfg, latency=MNIST_LATENCY, seed=0)
 rng = np.random.default_rng(0)
 eval_batch = {"x": test.x[:512], "y": test.y[:512]}
-hist = sim.run(ITERS, lambda k: ds.stacked_batch(10, rng), eval_batch, eval_every=20)
+hist = runtime.run(ITERS, lambda k: ds.stacked_batch(10, rng), eval_batch, eval_every=20)
 
 for k, t, l, a in zip(hist.iterations, hist.wallclock, hist.loss, hist.accuracy):
     print(f"iter {k:4d}  t={t:7.1f}s  loss={l:.4f}  acc={a:.3f}")

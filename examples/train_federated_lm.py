@@ -5,7 +5,9 @@
 Builds a 12-layer / d_model=768 llama-style decoder (~110M params with the
 granite-8b family config scaled down), 8 clients in 4 ring clusters, and runs
 a few hundred SD-FEEL iterations of real next-token training on synthetic
-Markov corpora (one distinct corpus per client = non-IID).
+Markov corpora (one distinct corpus per client = non-IID).  The run goes
+through ``FederationRuntime`` with the whole-round scheduler: one jit per
+tau1*tau2 Algorithm-1 round.
 """
 import argparse
 import dataclasses
@@ -14,14 +16,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import optim
 from repro.configs import get_config
-from repro.core.sdfeel import FLSpec, build_fl_train_step, init_stacked
+from repro.core.runtime import make_run
 from repro.data.synthetic import SyntheticLM
 from repro.models import CausalLM
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--steps", type=int, default=200,
+                help="protocol iterations (rounded up to whole rounds)")
 ap.add_argument("--clients", type=int, default=8)
 ap.add_argument("--d-model", type=int, default=768)
 ap.add_argument("--layers", type=int, default=12)
@@ -39,28 +41,32 @@ model = CausalLM(cfg)
 print(f"LM config: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
       f"-> {cfg.param_count() / 1e6:.1f}M params")
 
-fl = FLSpec(num_clients=args.clients, num_clusters=4, tau1=2, tau2=2, alpha=2,
-            learning_rate=0.3)
-opt = optim.sgd(fl.learning_rate)
-params = init_stacked(model, args.clients, jax.random.PRNGKey(0))
-opt_state = ()
+runtime = make_run({
+    "scheduler": "round",
+    "model": model,
+    "num_clients": args.clients,
+    "num_clusters": 4,
+    "tau1": 2, "tau2": 2, "alpha": 2,
+    "learning_rate": 0.3,
+    "seed": 0,
+})
+rounds = runtime.scheduler.rounds_for(args.steps)
 
 streams = [SyntheticLM.generate(512, args.seq, cfg.vocab_size, seed=11 * i)
            for i in range(args.clients)]
 iters = [s.batches(args.batch, seed=i) for i, s in enumerate(streams)]
-proto = fl.protocol()
-steps = {ev: jax.jit(build_fl_train_step(model, opt, fl, event=ev))
-         for ev in ("local", "intra", "inter")}
+
+
+def batch_fn(k):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
+
 
 t0 = time.time()
-for k in range(1, args.steps + 1):
-    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
-    event = proto.event_at(k)
-    params, opt_state, loss = steps[event](params, opt_state, batch)
-    if k % 20 == 0 or k == 1:
-        print(f"step {k:4d} [{event:5s}] loss={float(loss):.4f}  "
+for r in range(1, rounds + 1):
+    ev = runtime.step(batch_fn)
+    if r % 5 == 0 or r == 1:
+        print(f"round {r:4d} (iter {ev.iteration:4d}) loss={float(ev.losses[-1]):.4f}  "
               f"({(time.time() - t0):.0f}s)")
 
-m = jnp.full((args.clients,), 1.0 / args.clients)
-global_params = jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), params)
+global_params = runtime.global_params()
 print("consensus model extracted; done.")

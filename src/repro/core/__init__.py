@@ -4,7 +4,11 @@ from .protocol import ClusterSpec, SDFEELConfig, transition_matrix
 from .staleness import psi_inverse, psi_constant, psi_exponential, staleness_mixing_matrix
 from .aggregation import apply_transition_dense, stack_clients, unstack_clients
 from .latency import LatencyModel, MNIST_LATENCY, CIFAR_LATENCY
-from .sdfeel import SDFEELSimulator, FLSpec, build_fl_train_step, init_stacked, TrainHistory
+from .runtime import (
+    FederationRuntime, Scheduler, StepEvent, SyncScheduler, RoundScheduler,
+    AsyncScheduler, TrainHistory, make_run, register_scheduler, stacked_init,
+)
+from .sdfeel import SDFEELSimulator, FLSpec, build_fl_train_step, init_stacked
 from .async_engine import AsyncConfig, AsyncSDFEEL, make_speeds
 from .baselines import FedAvgTrainer, HierFAVGTrainer, FEELTrainer
 from . import theory
@@ -16,6 +20,9 @@ __all__ = [
     "psi_inverse", "psi_constant", "psi_exponential", "staleness_mixing_matrix",
     "apply_transition_dense", "stack_clients", "unstack_clients",
     "LatencyModel", "MNIST_LATENCY", "CIFAR_LATENCY",
+    "FederationRuntime", "Scheduler", "StepEvent", "SyncScheduler",
+    "RoundScheduler", "AsyncScheduler", "make_run", "register_scheduler",
+    "stacked_init",
     "SDFEELSimulator", "FLSpec", "build_fl_train_step", "init_stacked", "TrainHistory",
     "AsyncConfig", "AsyncSDFEEL", "make_speeds",
     "FedAvgTrainer", "HierFAVGTrainer", "FEELTrainer",

@@ -1,4 +1,7 @@
-"""Asynchronous SD-FEEL (Section IV) — event-driven, latency-faithful engine.
+"""Asynchronous SD-FEEL (Section IV) — config + deprecated engine shim.
+
+The event loop now lives in ``runtime.AsyncScheduler``; ``AsyncSDFEEL`` is a
+thin delegating wrapper kept for backwards compatibility.
 
 TPU SPMD programs are lock-step, so device-level asynchrony is *simulated*
 (exactly as in the paper, which is simulation-only): each edge cluster is an
@@ -21,16 +24,14 @@ fires at global iteration ``t``:
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import warnings
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .latency import LatencyModel
 from .protocol import ClusterSpec
-from .staleness import psi_inverse, staleness_mixing_matrix
+from .staleness import psi_inverse
 from .topology import Topology
 
 __all__ = ["AsyncConfig", "AsyncSDFEEL", "make_speeds"]
@@ -93,124 +94,63 @@ class AsyncConfig:
 
 
 class AsyncSDFEEL:
-    """Event-driven asynchronous SD-FEEL trainer."""
+    """Deprecated: use ``runtime.make_run({"scheduler": "async", ...})``.
+
+    Thin delegating wrapper over ``FederationRuntime(AsyncScheduler)`` that
+    preserves the historical API (``step(batcher) -> cluster``, ``t``,
+    ``last_update``, ``clock``, ``y``, ``run``)."""
 
     def __init__(self, model, cfg: AsyncConfig, seed: int = 0):
+        from .runtime import AsyncScheduler, FederationRuntime
+
+        warnings.warn(
+            "AsyncSDFEEL is deprecated; use repro.core.runtime.make_run "
+            "with scheduler='async'",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.model = model
         self.cfg = cfg
-        self.theta = cfg.theta()
-        self.iter_times = cfg.iter_times()
-        d = cfg.clusters.num_clusters
-        key = jax.random.PRNGKey(seed)
-        w0 = model.init(key)
-        # per-cluster models, stacked (D, ...)
-        self.y = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (d,) + x.shape).copy(), w0)
-        self.t = 0
-        self.last_update = np.zeros(d, dtype=np.int64)  # t'(d)
-        self.clock = 0.0
-        self._queue: list[tuple[float, int]] = [(self.iter_times[j], j) for j in range(d)]
-        heapq.heapify(self._queue)
-        self._m_tilde = jnp.asarray(cfg.clusters.m_tilde(), jnp.float32)
-        lr = cfg.learning_rate
-        theta_max = int(self.theta.max())
+        self.runtime = FederationRuntime(model, AsyncScheduler(cfg), seed=seed)
 
-        def client_delta(params, batches, theta_i):
-            """theta_i masked local epochs; returns normalized update (eq 19)."""
+    @property
+    def _sched(self):
+        return self.runtime.scheduler
 
-            def step(w, inp):
-                b, step_idx = inp
-                g = jax.grad(model.loss)(w, b)
-                mask = (step_idx < theta_i).astype(jnp.float32)
-                return jax.tree.map(lambda wi, gi: wi - lr * mask * gi, w, g), None
+    @property
+    def theta(self) -> np.ndarray:
+        return self._sched.theta
 
-            w_final, _ = jax.lax.scan(
-                step, params, (batches, jnp.arange(theta_max, dtype=jnp.int32))
-            )
-            return jax.tree.map(
-                lambda wf, w0_: (wf - w0_) / theta_i.astype(jnp.float32), w_final, params
-            )
+    @property
+    def iter_times(self) -> np.ndarray:
+        return self._sched.iter_times
 
-        def cluster_update(y_d, batches, thetas, m_hat):
-            """eq. 20: y^ = y + theta_bar sum_i m^_i Delta_i (vmap over clients)."""
-            deltas = jax.vmap(client_delta, in_axes=(None, 0, 0))(y_d, batches, thetas)
-            theta_bar = jnp.sum(m_hat * thetas.astype(jnp.float32))
-            return jax.tree.map(
-                lambda y, dl: y
-                + theta_bar * jnp.einsum("c...,c->...", dl, m_hat),
-                y_d,
-                deltas,
-            )
+    @property
+    def t(self) -> int:
+        return self._sched.t
 
-        self._cluster_update = jax.jit(cluster_update)
+    @property
+    def last_update(self) -> np.ndarray:
+        return self._sched.last_update
 
-        def mix(y, p_t):
-            return jax.tree.map(
-                lambda w: jnp.einsum(
-                    "d...,dj->j...", w.astype(jnp.float32), p_t
-                ).astype(w.dtype),
-                y,
-            )
+    @property
+    def clock(self) -> float:
+        return self._sched.clock
 
-        self._mix = jax.jit(mix)
+    @property
+    def y(self):
+        return self._sched.y
 
-        def global_model(y):
-            return jax.tree.map(lambda w: jnp.einsum("d...,d->...", w, self._m_tilde), y)
+    @y.setter
+    def y(self, value) -> None:
+        self._sched.y = value
 
-        self._global = jax.jit(global_model)
-        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
-        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
-
-    # ------------------------------------------------------------------
     def step(self, batcher) -> int:
         """Process one cluster event; returns the triggering cluster index."""
-        cfg = self.cfg
-        self.clock, d = heapq.heappop(self._queue)
-        clients = cfg.clusters.clients_of(d)
-        theta_max = int(self.theta.max())
-
-        # gather theta_max batches per client (masked beyond theta_i)
-        xs, ys = [], []
-        for c in clients:
-            bx, by = [], []
-            for _ in range(theta_max):
-                b = batcher.next_batch(c)
-                bx.append(b["x"])
-                by.append(b["y"])
-            xs.append(np.stack(bx))
-            ys.append(np.stack(by))
-        batches = {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
-        thetas = jnp.asarray(self.theta[clients], jnp.int32)
-        m_hat = jnp.asarray(cfg.clusters.m_hat()[clients], jnp.float32)
-
-        y_d = jax.tree.map(lambda w: w[d], self.y)
-        y_hat_d = self._cluster_update(y_d, batches, thetas, m_hat)
-        y = jax.tree.map(lambda w, yh: w.at[d].set(yh), self.y, y_hat_d)
-
-        # staleness-aware inter-cluster mixing (eq. 21-22)
-        gaps = (self.t - self.last_update).astype(np.float64)
-        gaps[d] = 0.0
-        p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
-        self.y = self._mix(y, jnp.asarray(p_t, jnp.float32))
-
-        self.t += 1
-        self.last_update[d] = self.t
-        heapq.heappush(self._queue, (self.clock + self.iter_times[d], d))
-        return d
+        return self.runtime.step(batcher).cluster
 
     def global_params(self):
-        return self._global(self.y)
+        return self.runtime.global_params()
 
     def run(self, num_events: int, batcher, eval_batch=None, eval_every: int = 20):
-        from .sdfeel import TrainHistory
-
-        hist = TrainHistory([], [], [], [])
-        for e in range(1, num_events + 1):
-            self.step(batcher)
-            if eval_batch is not None and (e % eval_every == 0 or e == num_events):
-                g = self.global_params()
-                hist.iterations.append(self.t)
-                hist.wallclock.append(self.clock)
-                hist.loss.append(float(self._eval_loss(g, eval_batch)))
-                if self._eval_acc is not None:
-                    hist.accuracy.append(float(self._eval_acc(g, eval_batch)))
-        return hist
+        return self.runtime.run(num_events, batcher, eval_batch, eval_every)

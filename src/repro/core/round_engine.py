@@ -16,6 +16,9 @@ at the end:
 Semantics are identical to stepping ``build_fl_train_step`` with the
 schedule's events (verified in tests/test_round_engine.py); the batch input
 carries a leading round dimension: leaves (tau1*tau2, C, b, ...).
+
+The training driver for this engine is ``runtime.RoundScheduler`` — this
+module only builds the compiled round step.
 """
 from __future__ import annotations
 

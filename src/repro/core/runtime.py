@@ -1,0 +1,629 @@
+"""Unified federation runtime: one trainer, pluggable schedulers.
+
+The paper describes three training regimes that previously lived in three
+disjoint engines.  ``FederationRuntime`` owns everything they shared —
+stacked-parameter init (Algorithm 1 line 1), the jitted eval functions, the
+Section V-B wall-clock accounting, eval cadence and ``TrainHistory`` — and
+delegates *how a step advances the federation* to a ``Scheduler``:
+
+====================  =====================================================
+Scheduler             Paper mapping
+====================  =====================================================
+``SyncScheduler``     Algorithm 1 / Lemma 1.  Each step is one protocol
+                      iteration: vmapped local SGD on every client followed
+                      by the scheduled transition ``T_k`` in
+                      ``{I, V B, V P^alpha B}`` (eqs. 2-4), applied as the
+                      dense einsum or the fused Pallas kernels.
+``RoundScheduler``    Whole-round SPMD path.  Each step is one full
+                      Algorithm-1 round — ``tau1 * tau2`` local iterations
+                      with intra-cluster aggregation every ``tau1`` inside a
+                      ``lax.scan`` and the inter-cluster gossip at the round
+                      boundary — compiled as a single XLA program
+                      (``round_engine.build_fl_round_step``).
+``AsyncScheduler``    Section IV asynchronous SD-FEEL.  Each step pops one
+                      edge-cluster event from a wall-clock priority queue,
+                      runs deadline-normalized local epochs ``theta_i``
+                      (eqs. 18-19), applies the cluster update with gain
+                      ``theta_bar_d`` (eq. 20) and the staleness-aware
+                      mixing matrix ``P_t`` (eqs. 21-22).
+====================  =====================================================
+
+New regimes (e.g. the semi-async deadline sampling of arXiv:2104.12678)
+plug in via ``register_scheduler`` and become available to the config-driven
+scenario factory ``make_run`` without touching the runtime::
+
+    runtime = make_run({
+        "scheduler": "sync",
+        "model": MnistCNN(),
+        "clusters": ClusterSpec.uniform(20, 4),
+        "topology": "ring",
+        "tau1": 5, "alpha": 1,
+        "latency": MNIST_LATENCY,
+    })
+    history = runtime.run(200, batch_fn, eval_batch, eval_every=20)
+
+The legacy entry points (``SDFEELSimulator``, ``AsyncSDFEEL``) remain as
+deprecated shims delegating here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregation import apply_transition_dense
+from .latency import LatencyModel
+from .protocol import SDFEELConfig, transition_matrix
+from .staleness import staleness_mixing_matrix
+from .topology import TOPOLOGIES, Topology
+
+PyTree = Any
+
+__all__ = [
+    "TrainHistory",
+    "StepEvent",
+    "Scheduler",
+    "SyncScheduler",
+    "RoundScheduler",
+    "AsyncScheduler",
+    "FederationRuntime",
+    "SCHEDULER_REGISTRY",
+    "register_scheduler",
+    "make_run",
+    "stacked_init",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared state containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainHistory:
+    iterations: list
+    wallclock: list
+    loss: list
+    accuracy: list
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """What one scheduler step did to the federation.
+
+    ``kind`` is the aggregation event ("local"/"intra"/"inter" for the sync
+    path, "round" for a compiled round, "cluster" for an async cluster
+    firing).  ``iteration`` is the protocol-iteration count after the step,
+    ``dt`` the Section V-B wall-clock the step consumed.
+    """
+
+    kind: str
+    iteration: int
+    dt: float = 0.0
+    cluster: Optional[int] = None
+    losses: Optional[np.ndarray] = None
+
+
+def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
+    """Identical initial model replicated on a leading axis (Alg. 1 line 1)."""
+    key = (
+        seed_or_key
+        if isinstance(seed_or_key, jax.Array)
+        else jax.random.PRNGKey(int(seed_or_key))
+    )
+    w0 = model.init(key)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_copies,) + x.shape).copy(), w0
+    )
+
+
+def _event_time(latency: Optional[LatencyModel], alpha: int, event: str) -> float:
+    """Per-iteration wall-clock of Section V-B for one sync protocol event."""
+    if latency is None:
+        return 0.0
+    t = latency.t_comp()
+    if event in ("intra", "inter"):
+        t += latency.t_comm_client_server()
+    if event == "inter":
+        t += alpha * latency.t_comm_server_server()
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Scheduler protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Pluggable federation schedule.
+
+    ``bind`` receives the model and seed once (build jitted steps, init
+    stacked params); ``step`` advances the federation by one schedule unit
+    given the runtime's batch source; ``global_params`` extracts the
+    consensus-phase model.
+    """
+
+    name: str
+
+    def bind(self, model, seed: int) -> None: ...
+
+    def step(self, k: int, batch_source) -> StepEvent: ...
+
+    def global_params(self) -> PyTree: ...
+
+
+# ---------------------------------------------------------------------------
+# Synchronous per-iteration scheduler (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class SyncScheduler:
+    """Algorithm 1 over stacked client models (host loop, CPU-friendly).
+
+    ``batch_source`` contract: callable ``k -> stacked batch`` with leaves of
+    shape (C, per_client_batch, ...).
+    """
+
+    name = "sync"
+
+    def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None):
+        self.cfg = cfg
+        self.latency = latency
+        self.params: PyTree = None
+
+    def bind(self, model, seed: int) -> None:
+        cfg = self.cfg
+        self.model = model
+        self.params = stacked_init(model, cfg.clusters.num_clients, seed)
+        self._t_intra = jnp.asarray(transition_matrix(cfg, "intra"), jnp.float32)
+        self._t_inter = jnp.asarray(transition_matrix(cfg, "inter"), jnp.float32)
+        self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
+        lr = cfg.learning_rate
+
+        def local_step(params, batch):
+            grads = jax.vmap(jax.grad(model.loss))(params, batch)
+            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+        self._local_step = jax.jit(local_step)
+        if cfg.aggregation_impl == "pallas":
+            # Pallas path (interpret=True on CPU): intra-cluster weighted
+            # reduce + alpha fused gossip rounds as TPU kernels.
+            from repro.kernels import cluster_agg_tree, gossip_mix_tree
+
+            spec, p_mat = cfg.clusters, jnp.asarray(cfg.P(), jnp.float32)
+            m_hat = jnp.asarray(spec.m_hat(), jnp.float32)
+            b_mat = jnp.asarray(spec.B(), jnp.float32)
+            d_count = spec.num_clusters
+            alpha = cfg.alpha
+            interp = jax.default_backend() != "tpu"
+
+            def pallas_apply(stacked, event):
+                y = cluster_agg_tree(stacked, m_hat, d_count, interpret=interp)
+                if event == "inter":
+                    y = gossip_mix_tree(y, p_mat, alpha=alpha, interpret=interp)
+                # broadcast back to clients (B^T selection)
+                return jax.tree.map(
+                    lambda w: jnp.einsum("d...,di->i...", w, b_mat), y
+                )
+
+            self._pallas_apply = pallas_apply
+        self._apply_t = jax.jit(apply_transition_dense)
+
+        def global_model(params):
+            return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
+
+        self._global_model = jax.jit(global_model)
+
+    # -- one protocol iteration (local + scheduled aggregation) -------------
+    def advance(self, k: int, stacked_batch: dict) -> str:
+        batch = jax.tree.map(jnp.asarray, stacked_batch)
+        self.params = self._local_step(self.params, batch)
+        event = self.cfg.event_at(k)
+        if event in ("intra", "inter"):
+            if self.cfg.aggregation_impl == "pallas":
+                self.params = self._pallas_apply(self.params, event)
+            else:
+                t = self._t_intra if event == "intra" else self._t_inter
+                self.params = self._apply_t(self.params, t)
+        return event
+
+    def iteration_time(self, event: str) -> float:
+        return _event_time(self.latency, self.cfg.alpha, event)
+
+    def step(self, k: int, batch_source) -> StepEvent:
+        event = self.advance(k, batch_source(k))
+        return StepEvent(kind=event, iteration=k, dt=self.iteration_time(event))
+
+    def global_params(self) -> PyTree:
+        """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
+        return self._global_model(self.params)
+
+
+# ---------------------------------------------------------------------------
+# Whole-round compiled scheduler (production SPMD path)
+# ---------------------------------------------------------------------------
+
+class RoundScheduler:
+    """One step == one scan-compiled tau1*tau2 Algorithm-1 round.
+
+    ``batch_source`` contract: callable ``k -> stacked batch`` indexed by the
+    *protocol iteration* — step ``r`` consumes iterations
+    ``(r-1)*tau1*tau2 + 1 .. r*tau1*tau2``.
+    """
+
+    name = "round"
+
+    def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None):
+        self.fl = fl
+        self.optimizer = optimizer
+        self.latency = latency
+        self.params: PyTree = None
+        self.opt_state: PyTree = None
+
+    @property
+    def iterations_per_round(self) -> int:
+        return self.fl.tau1 * self.fl.tau2
+
+    def rounds_for(self, iterations: int) -> int:
+        """Whole compiled rounds covering ``iterations`` protocol iterations."""
+        return max(1, -(-iterations // self.iterations_per_round))
+
+    def bind(self, model, seed: int) -> None:
+        from .. import optim
+        from .round_engine import build_fl_round_step
+
+        self.model = model
+        fl = self.fl
+        self._proto = fl.protocol()
+        opt = self.optimizer or optim.sgd(fl.learning_rate)
+        self.optimizer = opt
+        self.params = stacked_init(model, fl.num_clients, seed)
+        self.opt_state = opt.init(self.params)
+        self._round_step = jax.jit(build_fl_round_step(model, opt, fl))
+
+    def round_time(self) -> float:
+        """Section V-B wall-clock of one full round."""
+        return sum(
+            _event_time(self.latency, self.fl.alpha, self._proto.event_at(i))
+            for i in range(1, self.iterations_per_round + 1)
+        )
+
+    def step(self, k: int, batch_source) -> StepEvent:
+        ipr = self.iterations_per_round
+        base = (k - 1) * ipr
+        batches = [batch_source(base + i) for i in range(1, ipr + 1)]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches
+        )
+        self.params, self.opt_state, losses = self._round_step(
+            self.params, self.opt_state, stacked
+        )
+        return StepEvent(
+            kind="round",
+            iteration=k * ipr,
+            dt=self.round_time(),
+            losses=np.asarray(losses),
+        )
+
+    def global_params(self) -> PyTree:
+        m = jnp.asarray(self._proto.clusters.m(), jnp.float32)
+        return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), self.params)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous event-driven scheduler (Section IV)
+# ---------------------------------------------------------------------------
+
+class AsyncScheduler:
+    """Priority-queue cluster events with staleness-aware mixing.
+
+    ``batch_source`` contract: an object with ``next_batch(client) -> batch``
+    (e.g. ``repro.data.ClientBatcher``).
+    """
+
+    name = "async"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def bind(self, model, seed: int) -> None:
+        cfg = self.cfg
+        self.model = model
+        self.theta = cfg.theta()
+        self.iter_times = cfg.iter_times()
+        d = cfg.clusters.num_clusters
+        # per-cluster models, stacked (D, ...)
+        self.y = stacked_init(model, d, seed)
+        self.t = 0
+        self.last_update = np.zeros(d, dtype=np.int64)  # t'(d)
+        self.clock = 0.0
+        self._queue: list[tuple[float, int]] = [
+            (self.iter_times[j], j) for j in range(d)
+        ]
+        heapq.heapify(self._queue)
+        self._m_tilde = jnp.asarray(cfg.clusters.m_tilde(), jnp.float32)
+        lr = cfg.learning_rate
+        theta_max = int(self.theta.max())
+
+        def client_delta(params, batches, theta_i):
+            """theta_i masked local epochs; returns normalized update (eq 19)."""
+
+            def step(w, inp):
+                b, step_idx = inp
+                g = jax.grad(model.loss)(w, b)
+                mask = (step_idx < theta_i).astype(jnp.float32)
+                return jax.tree.map(lambda wi, gi: wi - lr * mask * gi, w, g), None
+
+            w_final, _ = jax.lax.scan(
+                step, params, (batches, jnp.arange(theta_max, dtype=jnp.int32))
+            )
+            return jax.tree.map(
+                lambda wf, w0_: (wf - w0_) / theta_i.astype(jnp.float32), w_final, params
+            )
+
+        def cluster_update(y_d, batches, thetas, m_hat):
+            """eq. 20: y^ = y + theta_bar sum_i m^_i Delta_i (vmap over clients)."""
+            deltas = jax.vmap(client_delta, in_axes=(None, 0, 0))(y_d, batches, thetas)
+            theta_bar = jnp.sum(m_hat * thetas.astype(jnp.float32))
+            return jax.tree.map(
+                lambda y, dl: y + theta_bar * jnp.einsum("c...,c->...", dl, m_hat),
+                y_d,
+                deltas,
+            )
+
+        self._cluster_update = jax.jit(cluster_update)
+
+        def mix(y, p_t):
+            return jax.tree.map(
+                lambda w: jnp.einsum(
+                    "d...,dj->j...", w.astype(jnp.float32), p_t
+                ).astype(w.dtype),
+                y,
+            )
+
+        self._mix = jax.jit(mix)
+
+        def global_model(y):
+            return jax.tree.map(lambda w: jnp.einsum("d...,d->...", w, self._m_tilde), y)
+
+        self._global = jax.jit(global_model)
+
+    def step(self, k: int, batch_source) -> StepEvent:
+        cfg = self.cfg
+        prev_clock = self.clock
+        self.clock, d = heapq.heappop(self._queue)
+        clients = cfg.clusters.clients_of(d)
+        theta_max = int(self.theta.max())
+
+        # gather theta_max batches per client (masked beyond theta_i)
+        xs, ys = [], []
+        for c in clients:
+            bx, by = [], []
+            for _ in range(theta_max):
+                b = batch_source.next_batch(c)
+                bx.append(b["x"])
+                by.append(b["y"])
+            xs.append(np.stack(bx))
+            ys.append(np.stack(by))
+        batches = {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+        thetas = jnp.asarray(self.theta[clients], jnp.int32)
+        m_hat = jnp.asarray(cfg.clusters.m_hat()[clients], jnp.float32)
+
+        y_d = jax.tree.map(lambda w: w[d], self.y)
+        y_hat_d = self._cluster_update(y_d, batches, thetas, m_hat)
+        y = jax.tree.map(lambda w, yh: w.at[d].set(yh), self.y, y_hat_d)
+
+        # staleness-aware inter-cluster mixing (eq. 21-22)
+        gaps = (self.t - self.last_update).astype(np.float64)
+        gaps[d] = 0.0
+        p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
+        self.y = self._mix(y, jnp.asarray(p_t, jnp.float32))
+
+        self.t += 1
+        self.last_update[d] = self.t
+        heapq.heappush(self._queue, (self.clock + self.iter_times[d], d))
+        return StepEvent(
+            kind="cluster", iteration=self.t, dt=self.clock - prev_clock, cluster=d
+        )
+
+    def global_params(self) -> PyTree:
+        return self._global(self.y)
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+class FederationRuntime:
+    """Event-driven federated trainer parameterized by a ``Scheduler``.
+
+    Owns the pieces every regime shares: parameter init (delegated to the
+    scheduler's ``bind``), the jitted eval functions, the wall-clock
+    accumulator, eval cadence and ``TrainHistory`` assembly.
+    """
+
+    def __init__(self, model, scheduler: Scheduler, seed: int = 0):
+        self.model = model
+        self.scheduler = scheduler
+        self.clock = 0.0
+        self.iteration = 0
+        self._k = 0
+        scheduler.bind(model, seed)
+        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
+        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
+
+    def step(self, batch_source) -> StepEvent:
+        """Advance the federation by one schedule unit."""
+        self._k += 1
+        ev = self.scheduler.step(self._k, batch_source)
+        self.clock += ev.dt
+        self.iteration = ev.iteration
+        return ev
+
+    def global_params(self) -> PyTree:
+        return self.scheduler.global_params()
+
+    def evaluate(self, eval_batch) -> tuple[float, Optional[float]]:
+        g = self.global_params()
+        batch = jax.tree.map(jnp.asarray, eval_batch)
+        loss = float(self._eval_loss(g, batch))
+        acc = float(self._eval_acc(g, batch)) if self._eval_acc is not None else None
+        return loss, acc
+
+    def run(
+        self,
+        num_steps: int,
+        batch_source,
+        eval_batch=None,
+        eval_every: int = 50,
+    ) -> TrainHistory:
+        """Run ``num_steps`` schedule units, evaluating every ``eval_every``.
+
+        ``wallclock`` entries use the scheduler's absolute ``clock`` when it
+        keeps one (the async event queue is keyed by absolute finish times,
+        so time spent in earlier manual ``step`` calls is included); schedule
+        types without their own clock report time relative to this call.
+        """
+        hist = TrainHistory([], [], [], [])
+        self._k = 0
+        self.clock = 0.0
+        for e in range(1, num_steps + 1):
+            self.step(batch_source)
+            if eval_batch is not None and (e % eval_every == 0 or e == num_steps):
+                loss, acc = self.evaluate(eval_batch)
+                hist.iterations.append(self.iteration)
+                hist.wallclock.append(getattr(self.scheduler, "clock", self.clock))
+                hist.loss.append(loss)
+                if acc is not None:
+                    hist.accuracy.append(acc)
+        return hist
+
+
+# ---------------------------------------------------------------------------
+# Config-driven scenario registry
+# ---------------------------------------------------------------------------
+
+SCHEDULER_REGISTRY: dict[str, Callable[[dict], Scheduler]] = {}
+
+
+def register_scheduler(name: str):
+    """Register a scenario factory: ``dict -> Scheduler``.
+
+    This is the plugin point for new regimes — a semi-async deadline sampler
+    is a ~100-line scheduler class plus one ``@register_scheduler`` factory.
+    """
+
+    def deco(factory: Callable[[dict], Scheduler]):
+        SCHEDULER_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def _as_topology(topo, num_clusters: int) -> Topology:
+    if isinstance(topo, Topology):
+        return topo
+    return TOPOLOGIES[topo](num_clusters)
+
+
+def _as_clusters(s: dict):
+    from .protocol import ClusterSpec
+
+    clusters = s.pop("clusters", None)
+    if clusters is not None:
+        return clusters
+    return ClusterSpec.uniform(s.pop("num_clients"), s.pop("num_clusters"))
+
+
+@register_scheduler("sync")
+def _make_sync(s: dict) -> SyncScheduler:
+    clusters = _as_clusters(s)
+    topology = _as_topology(s.pop("topology", "ring"), clusters.num_clusters)
+    cfg = SDFEELConfig(
+        clusters=clusters,
+        topology=topology,
+        tau1=s.pop("tau1", 5),
+        tau2=s.pop("tau2", 1),
+        alpha=s.pop("alpha", 1),
+        learning_rate=s.pop("learning_rate", 0.01),
+        aggregation_impl=s.pop("aggregation_impl", "dense"),
+    )
+    return SyncScheduler(cfg, latency=s.pop("latency", None))
+
+
+@register_scheduler("round")
+def _make_round(s: dict) -> RoundScheduler:
+    from .sdfeel import FLSpec
+
+    fl = s.pop("fl", None)
+    if fl is None:
+        fl = FLSpec(
+            num_clients=s.pop("num_clients"),
+            num_clusters=s.pop("num_clusters"),
+            tau1=s.pop("tau1", 2),
+            tau2=s.pop("tau2", 1),
+            alpha=s.pop("alpha", 2),
+            learning_rate=s.pop("learning_rate", 0.01),
+            impl=s.pop("impl", "dense"),
+            topology=s.pop("topology", "ring"),
+        )
+    return RoundScheduler(
+        fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None)
+    )
+
+
+@register_scheduler("async")
+def _make_async(s: dict) -> AsyncScheduler:
+    from .async_engine import AsyncConfig, make_speeds
+    from .staleness import psi_constant, psi_inverse
+
+    clusters = _as_clusters(s)
+    topology = _as_topology(s.pop("topology", "ring"), clusters.num_clusters)
+    speeds = s.pop("speeds", None)
+    if speeds is None:
+        speeds = make_speeds(
+            clusters.num_clients,
+            s.pop("heterogeneity", 1.0),
+            seed=s.pop("speed_seed", 0),
+        )
+    psi = s.pop("psi", psi_inverse)
+    if isinstance(psi, str):
+        psi = {"staleness": psi_inverse, "constant": psi_constant}[psi]
+    cfg = AsyncConfig(
+        clusters=clusters,
+        topology=topology,
+        speeds=np.asarray(speeds),
+        learning_rate=s.pop("learning_rate", 0.01),
+        theta_min=s.pop("theta_min", 1),
+        theta_max=s.pop("theta_max", 20),
+        min_batches=s.pop("min_batches", 4),
+        psi=psi,
+        alpha_latency=s.pop("latency", None),
+    )
+    return AsyncScheduler(cfg)
+
+
+def make_run(scenario: dict) -> FederationRuntime:
+    """Build a ``FederationRuntime`` from a flat scenario config dict.
+
+    Required keys: ``model`` plus whatever the chosen ``scheduler`` factory
+    needs (see the registered factories above).  Common keys: ``scheduler``
+    (default "sync"), ``seed``.  Unconsumed keys raise, so typos fail fast.
+    """
+    s = dict(scenario)
+    name = s.pop("scheduler", "sync")
+    if name not in SCHEDULER_REGISTRY:
+        raise KeyError(
+            f"unknown scheduler {name!r}; registered: {sorted(SCHEDULER_REGISTRY)}"
+        )
+    model = s.pop("model")
+    seed = s.pop("seed", 0)
+    sched = SCHEDULER_REGISTRY[name](s)
+    if s:
+        raise TypeError(f"unused scenario keys for {name!r}: {sorted(s)}")
+    return FederationRuntime(model, sched, seed=seed)

@@ -1,11 +1,8 @@
-"""Synchronous SD-FEEL engines.
+"""Synchronous SD-FEEL: legacy simulator shim + the SPMD iteration step.
 
-Two engines share the same protocol math (``protocol.py`` / ``aggregation.py``):
-
-* ``SDFEELSimulator`` — host-driven loop over Algorithm 1 for the paper's
-  simulation experiments (50 clients / 10 edge servers / small CNNs).  Client
-  models are stacked on a leading axis and updated with ``vmap(grad)``;
-  wall-clock time is accounted with the §V-B latency model.
+* ``SDFEELSimulator`` — deprecated shim over ``FederationRuntime`` with a
+  ``SyncScheduler`` (see ``runtime.py``).  Kept for backwards compatibility;
+  new code should construct runs via ``runtime.make_run``.
 
 * ``build_fl_train_step`` — the SPMD production path: one jitted SD-FEEL
   *iteration* where the client axis is sharded over the mesh ``data`` axis
@@ -19,11 +16,11 @@ Two engines share the same protocol math (``protocol.py`` / ``aggregation.py``):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..optim import Optimizer
 from .aggregation import (
@@ -34,29 +31,26 @@ from .aggregation import (
 )
 from .latency import LatencyModel
 from .protocol import SDFEELConfig, transition_matrix
+from .runtime import TrainHistory  # noqa: F401  (re-exported for back-compat)
 
 PyTree = Any
 
 __all__ = ["SDFEELSimulator", "FLSpec", "build_fl_train_step", "TrainHistory"]
 
 
+
+
 # ---------------------------------------------------------------------------
-# Host-driven simulator (paper experiments)
+# Deprecated host-driven simulator (now a FederationRuntime shim)
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class TrainHistory:
-    iterations: list
-    wallclock: list
-    loss: list
-    accuracy: list
-
-    def as_dict(self):
-        return dataclasses.asdict(self)
-
 
 class SDFEELSimulator:
-    """Algorithm 1 over stacked client models (host loop, CPU-friendly)."""
+    """Deprecated: use ``runtime.make_run({"scheduler": "sync", ...})``.
+
+    Thin delegating wrapper over ``FederationRuntime(SyncScheduler)`` that
+    preserves the historical API (``step(k, batch)``, mutable ``params``,
+    ``iteration_time``, ``global_params``, ``run``).
+    """
 
     def __init__(
         self,
@@ -65,81 +59,37 @@ class SDFEELSimulator:
         latency: Optional[LatencyModel] = None,
         seed: int = 0,
     ):
+        from .runtime import FederationRuntime, SyncScheduler
+
+        warnings.warn(
+            "SDFEELSimulator is deprecated; use repro.core.runtime.make_run "
+            "with scheduler='sync'",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.model = model
         self.cfg = cfg
         self.latency = latency
-        c = cfg.clusters.num_clients
-        key = jax.random.PRNGKey(seed)
-        w0 = model.init(key)
-        # identical init on every client (Algorithm 1 line 1)
-        self.params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (c,) + x.shape).copy(), w0)
-        self._t_intra = jnp.asarray(transition_matrix(cfg, "intra"), jnp.float32)
-        self._t_inter = jnp.asarray(transition_matrix(cfg, "inter"), jnp.float32)
-        self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
-        lr = cfg.learning_rate
+        self.runtime = FederationRuntime(
+            model, SyncScheduler(cfg, latency=latency), seed=seed
+        )
 
-        def local_step(params, batch):
-            grads = jax.vmap(jax.grad(model.loss))(params, batch)
-            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    @property
+    def params(self) -> PyTree:
+        return self.runtime.scheduler.params
 
-        self._local_step = jax.jit(local_step)
-        if cfg.aggregation_impl == "pallas":
-            # Pallas path (interpret=True on CPU): intra-cluster weighted
-            # reduce + alpha fused gossip rounds as TPU kernels.
-            from repro.kernels import cluster_agg_tree, gossip_mix_tree
+    @params.setter
+    def params(self, value: PyTree) -> None:
+        self.runtime.scheduler.params = value
 
-            spec, p_mat = cfg.clusters, jnp.asarray(cfg.P(), jnp.float32)
-            m_hat = jnp.asarray(spec.m_hat(), jnp.float32)
-            b_mat = jnp.asarray(spec.B(), jnp.float32)
-            d_count = spec.num_clusters
-            alpha = cfg.alpha
-            interp = jax.default_backend() != "tpu"
-
-            def pallas_apply(stacked, event):
-                y = cluster_agg_tree(stacked, m_hat, d_count, interpret=interp)
-                if event == "inter":
-                    y = gossip_mix_tree(y, p_mat, alpha=alpha, interpret=interp)
-                # broadcast back to clients (B^T selection)
-                return jax.tree.map(
-                    lambda w: jnp.einsum("d...,di->i...", w, b_mat), y
-                )
-
-            self._pallas_apply = pallas_apply
-        self._apply_t = jax.jit(apply_transition_dense)
-
-        def global_model(params):
-            return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
-
-        self._global_model = jax.jit(global_model)
-        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
-        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
-
-    # -- one protocol iteration (local + scheduled aggregation) -------------
     def step(self, k: int, stacked_batch: dict) -> str:
-        batch = jax.tree.map(jnp.asarray, stacked_batch)
-        self.params = self._local_step(self.params, batch)
-        event = self.cfg.event_at(k)
-        if event in ("intra", "inter"):
-            if self.cfg.aggregation_impl == "pallas":
-                self.params = self._pallas_apply(self.params, event)
-            else:
-                t = self._t_intra if event == "intra" else self._t_inter
-                self.params = self._apply_t(self.params, t)
-        return event
+        return self.runtime.scheduler.advance(k, stacked_batch)
 
     def iteration_time(self, event: str) -> float:
-        if self.latency is None:
-            return 0.0
-        t = self.latency.t_comp()
-        if event in ("intra", "inter"):
-            t += self.latency.t_comm_client_server()
-        if event == "inter":
-            t += self.cfg.alpha * self.latency.t_comm_server_server()
-        return t
+        return self.runtime.scheduler.iteration_time(event)
 
     def global_params(self) -> PyTree:
-        """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
-        return self._global_model(self.params)
+        return self.runtime.global_params()
 
     def run(
         self,
@@ -148,19 +98,7 @@ class SDFEELSimulator:
         eval_batch: Optional[dict] = None,
         eval_every: int = 50,
     ) -> TrainHistory:
-        hist = TrainHistory([], [], [], [])
-        clock = 0.0
-        for k in range(1, num_iterations + 1):
-            event = self.step(k, batch_fn(k))
-            clock += self.iteration_time(event)
-            if eval_batch is not None and (k % eval_every == 0 or k == num_iterations):
-                g = self.global_params()
-                hist.iterations.append(k)
-                hist.wallclock.append(clock)
-                hist.loss.append(float(self._eval_loss(g, eval_batch)))
-                if self._eval_acc is not None:
-                    hist.accuracy.append(float(self._eval_acc(g, eval_batch)))
-        return hist
+        return self.runtime.run(num_iterations, batch_fn, eval_batch, eval_every)
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +169,8 @@ def build_fl_train_step(
         client_axis = "data"
         axis_size = fl.num_clients
 
+        from ..sharding.compat import shard_map_compat
+
         def _aggregate(params):
             def agg(tree):
                 def per_leaf(x):
@@ -251,9 +191,8 @@ def build_fl_train_step(
 
                 return jax.tree.map(per_leaf, tree)
 
-            return jax.shard_map(
-                agg, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs,
-                check_vma=False,
+            return shard_map_compat(
+                agg, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs
             )(params)
 
     else:
@@ -297,5 +236,6 @@ def build_fl_train_step(
 
 def init_stacked(model, num_clients: int, rng) -> PyTree:
     """Identical initial model replicated on the client axis."""
-    w0 = model.init(rng)
-    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape).copy(), w0)
+    from .runtime import stacked_init
+
+    return stacked_init(model, num_clients, rng)

@@ -18,20 +18,26 @@ from repro.sharding.rules import MeshAxes
 __all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes_for"]
 
 
+def _auto_axis_types(n: int) -> dict:
+    """``axis_types`` kwarg when available; jax < 0.5 has no AxisType."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_auto_axis_types(len(axes)))
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (requires enough --xla_force_host devices)."""
-    auto = jax.sharding.AxisType.Auto
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"), axis_types=(auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=(auto,) * 2)
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             **_auto_axis_types(3))
+    return jax.make_mesh((data, model), ("data", "model"), **_auto_axis_types(2))
 
 
 def mesh_axes_for(mesh: jax.sharding.Mesh) -> MeshAxes:

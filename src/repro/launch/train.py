@@ -1,8 +1,10 @@
-"""End-to-end SD-FEEL training driver.
+"""End-to-end SD-FEEL training driver (FederationRuntime-based).
 
 Runs real federated training of a causal LM (reduced or full arch config)
 with the SD-FEEL protocol: per-client local SGD + intra-/inter-cluster
-aggregations, synthetic LM data partitioned per client.
+aggregations, synthetic LM data partitioned per client.  Training is driven
+through ``repro.core.runtime.make_run`` with the whole-round scheduler (one
+jit = one tau1*tau2 Algorithm-1 round).
 
 On this CPU container it drives reduced configs end-to-end (see
 examples/train_federated_lm.py for the ~100M-parameter run); on a TPU
@@ -19,12 +21,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import optim
 from repro.configs import get_config
-from repro.core.protocol import transition_matrix
-from repro.core.sdfeel import FLSpec, build_fl_train_step, init_stacked
+from repro.core.runtime import make_run
 from repro.data.synthetic import SyntheticLM
 from repro.models import CausalLM
 
@@ -34,7 +33,8 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--steps", type=int, default=50,
+                    help="protocol iterations (rounded up to whole rounds)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--clusters", type=int, default=4)
     ap.add_argument("--tau1", type=int, default=2)
@@ -54,24 +54,46 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = CausalLM(cfg)
-    fl = FLSpec(
-        num_clients=args.clients, num_clusters=args.clusters,
-        tau1=args.tau1, tau2=args.tau2, alpha=args.alpha, learning_rate=args.lr,
-    )
-    opt = optim.sgd(args.lr)
-    rng = jax.random.PRNGKey(args.seed)
-    params = init_stacked(model, args.clients, rng)
-    opt_state = ()
-    start_step = 0
+    runtime = make_run({
+        "scheduler": "round",
+        "model": model,
+        "num_clients": args.clients,
+        "num_clusters": args.clusters,
+        "tau1": args.tau1,
+        "tau2": args.tau2,
+        "alpha": args.alpha,
+        "learning_rate": args.lr,
+        "seed": args.seed,
+    })
+    sched = runtime.scheduler
+    ipr = sched.iterations_per_round
+    rounds = sched.rounds_for(args.steps)
+
+    start_round = 0
     if args.save_dir and args.resume:
         from repro.checkpoint import latest_step, restore_checkpoint
         if latest_step(args.save_dir) is not None:
-            params, manifest = restore_checkpoint(args.save_dir, params)
-            start_step = manifest["step"]
-            print(f"resumed from step {start_step}")
-    n_params = sum(p.size for p in jax.tree.leaves(params)) // args.clients
+            sched.params, manifest = restore_checkpoint(args.save_dir, sched.params)
+            if (manifest.get("metadata") or {}).get("unit") == "round":
+                start_round = manifest["step"]
+            else:
+                # pre-runtime checkpoints counted protocol iterations; round up
+                # so no already-applied iteration is ever re-applied
+                start_round = -(-manifest["step"] // ipr)
+                print(f"legacy checkpoint: step {manifest['step']} -> round {start_round}")
+                if manifest["step"] % ipr:
+                    print(f"WARNING: checkpoint stopped mid-round; iterations "
+                          f"{manifest['step'] + 1}..{start_round * ipr} (incl. the "
+                          f"round-boundary aggregation) are skipped — resumed "
+                          f"trajectory is inexact for the whole-round engine")
+            print(f"resumed from round {start_round}")
+            if start_round >= rounds:
+                print(f"checkpoint already at round {start_round} >= target "
+                      f"{rounds}; nothing to train")
+    n_params = sum(p.size for p in jax.tree.leaves(sched.params)) // args.clients
     print(f"arch={cfg.name} params/client={n_params:,} clients={args.clients} "
-          f"clusters={args.clusters} tau1={args.tau1} tau2={args.tau2} alpha={args.alpha}")
+          f"clusters={args.clusters} tau1={args.tau1} tau2={args.tau2} "
+          f"alpha={args.alpha} rounds={rounds} ({rounds * ipr} iterations)")
 
     # per-client non-IID-ish token streams (different seeds = different stats)
     streams = [
@@ -80,28 +102,21 @@ def main(argv=None):
     ]
     iters = [s.batches(args.batch, seed=args.seed + i) for i, s in enumerate(streams)]
 
-    steps = {
-        ev: jax.jit(build_fl_train_step(model, opt, fl, event=ev))
-        for ev in ("local", "intra", "inter")
-    }
-    proto = fl.protocol()
+    def batch_fn(k):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
+
     t0 = time.time()
-    for k in range(start_step + 1, args.steps + 1):
-        batch = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[next(it) for it in iters]
-        )
-        event = proto.event_at(k)
-        params, opt_state, loss = steps[event](params, opt_state, batch)
-        if k % args.log_every == 0 or k == args.steps:
-            print(f"step {k:5d} event={event:5s} loss={float(loss):.4f} "
-                  f"({time.time() - t0:.1f}s)")
-        if args.save_dir and (k % args.save_every == 0 or k == args.steps):
+    for r in range(start_round + 1, rounds + 1):
+        ev = runtime.step(batch_fn)
+        if r % args.log_every == 0 or r == rounds or r == start_round + 1:
+            print(f"round {r:4d} (iter {r * ipr:5d}) "
+                  f"loss={float(ev.losses[-1]):.4f} ({time.time() - t0:.1f}s)")
+        if args.save_dir and (r % args.save_every == 0 or r == rounds):
             from repro.checkpoint import save_checkpoint
-            save_checkpoint(args.save_dir, params, step=k,
-                            metadata={"arch": cfg.name, "event": event})
+            save_checkpoint(args.save_dir, sched.params, step=r,
+                            metadata={"arch": cfg.name, "unit": "round"})
     # consensus phase: weighted global model
-    m = jnp.full((args.clients,), 1.0 / args.clients)
-    global_params = jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), params)
+    global_params = runtime.global_params()
     print("done; consensus model extracted.")
     return global_params
 

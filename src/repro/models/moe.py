@@ -124,12 +124,14 @@ def moe_mlp(x: jax.Array, params: dict, *, num_experts_per_tok: int, capacity_fa
                     out, aux = batched(xb)
                     return out, jax.lax.pmean(aux, tuple(axes))
 
-                return jax.shard_map(
+                from repro.sharding.compat import shard_map_compat
+
+                return shard_map_compat(
                     local_fn, mesh=mesh,
                     in_specs=(jax.sharding.PartitionSpec(bspec, None, None),),
                     out_specs=(jax.sharding.PartitionSpec(bspec, None, None),
                                jax.sharding.PartitionSpec()),
-                    axis_names=frozenset(axes), check_vma=False,
+                    axis_names=frozenset(axes),
                 )(x)
         return batched(x)
 

@@ -1,0 +1,35 @@
+"""Version-compat wrapper for ``shard_map``.
+
+``jax.shard_map`` (with ``check_vma`` / ``axis_names``) stabilized after the
+0.4.x series; older jaxlibs ship it as ``jax.experimental.shard_map`` with
+``check_rep`` and the complementary ``auto`` axis set.  Callers target the
+modern signature and this wrapper translates when needed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["shard_map_compat"]
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names: Optional[frozenset] = None):
+    """``jax.shard_map(..., check_vma=False)`` portable across jax versions.
+
+    ``axis_names`` (modern API) restricts which mesh axes are manual; on the
+    experimental API it is translated to the complementary ``auto`` set.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": False}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map
+
+    kwargs = {"check_rep": False}
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

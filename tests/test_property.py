@@ -1,5 +1,9 @@
 """Hypothesis property tests on the protocol's algebraic invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra for property tests")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

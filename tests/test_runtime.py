@@ -1,0 +1,283 @@
+"""FederationRuntime + scheduler equivalence vs. the legacy engine semantics.
+
+Each scheduler is checked against an *independent* reference implementation
+of the paper math (not against the shims, which now delegate to the runtime):
+
+* SyncScheduler   vs. a hand-rolled Algorithm-1 loop (vmap(grad) + dense
+  Lemma-1 transitions + §V-B clock);
+* RoundScheduler  vs. sequentially stepping ``build_fl_train_step`` through
+  the schedule's events;
+* AsyncScheduler  vs. an independently simulated event queue (order,
+  staleness gaps) and the legacy ``AsyncSDFEEL`` facade.
+"""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (
+    AsyncConfig, AsyncSDFEEL, ClusterSpec, FLSpec, MNIST_LATENCY, SDFEELConfig,
+    SDFEELSimulator, build_fl_train_step, init_stacked, make_run, make_speeds,
+    register_scheduler, ring, transition_matrix,
+)
+from repro.core.runtime import SCHEDULER_REGISTRY, FederationRuntime, StepEvent
+from repro.data import ClientBatcher, FederatedDataset, iid_partition, mnist_like
+from repro.models import MnistCNN
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    data = mnist_like(600, seed=0)
+    train, test = data.split(0.8)
+    parts = iid_partition(train.y, 8)
+    ds = FederatedDataset(train, parts)
+    eval_batch = {"x": test.x[:128], "y": test.y[:128]}
+    return ds, eval_batch
+
+
+def _cluster_spec(ds):
+    return ClusterSpec(8, (0, 0, 1, 1, 2, 2, 3, 3), ds.data_sizes())
+
+
+# ---------------------------------------------------------------------------
+# SyncScheduler vs. hand-rolled Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_sync_scheduler_matches_reference_loop(fed_data):
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    cfg = SDFEELConfig(clusters=spec, topology=ring(4), tau1=2, tau2=2,
+                       alpha=2, learning_rate=0.05)
+    model = MnistCNN()
+    runtime = make_run({
+        "scheduler": "sync", "model": model, "clusters": spec,
+        "topology": "ring", "tau1": 2, "tau2": 2, "alpha": 2,
+        "learning_rate": 0.05, "latency": MNIST_LATENCY, "seed": 0,
+    })
+
+    rng = np.random.default_rng(0)
+    batches = [ds.stacked_batch(4, rng) for _ in range(6)]
+
+    # independent reference: stacked init + vmap(grad) + dense transitions
+    w = init_stacked(model, 8, jax.random.PRNGKey(0))
+    t_mats = {e: jnp.asarray(transition_matrix(cfg, e), jnp.float32)
+              for e in ("intra", "inter")}
+    grad_fn = jax.jit(jax.vmap(jax.grad(model.loss)))
+    clock = 0.0
+    for k in range(1, 7):
+        b = jax.tree.map(jnp.asarray, batches[k - 1])
+        g = grad_fn(w, b)
+        w = jax.tree.map(lambda p, gi: p - 0.05 * gi, w, g)
+        event = cfg.event_at(k)
+        if event != "local":
+            w = jax.tree.map(
+                lambda x: jnp.einsum("c...,cd->d...", x, t_mats[event]), w
+            )
+        clock += MNIST_LATENCY.t_comp()
+        if event != "local":
+            clock += MNIST_LATENCY.t_comm_client_server()
+        if event == "inter":
+            clock += cfg.alpha * MNIST_LATENCY.t_comm_server_server()
+
+        ev = runtime.step(lambda kk: batches[kk - 1])
+        assert ev.kind == event and ev.iteration == k
+
+    assert np.isclose(runtime.clock, clock)
+    for a, b in zip(jax.tree.leaves(runtime.scheduler.params), jax.tree.leaves(w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_sync_shim_delegates_step_for_step(fed_data):
+    """Legacy SDFEELSimulator facade tracks the runtime exactly."""
+    ds, eval_batch = fed_data
+    spec = _cluster_spec(ds)
+    cfg = SDFEELConfig(clusters=spec, topology=ring(4), tau1=2, tau2=1,
+                       alpha=1, learning_rate=0.05)
+    with pytest.deprecated_call():
+        sim = SDFEELSimulator(MnistCNN(), cfg, latency=MNIST_LATENCY, seed=0)
+    runtime = make_run({
+        "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "tau1": 2, "tau2": 1, "alpha": 1,
+        "learning_rate": 0.05, "latency": MNIST_LATENCY, "seed": 0,
+    })
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(1)
+    h1 = sim.run(8, lambda k: ds.stacked_batch(4, rng1), eval_batch, eval_every=4)
+    h2 = runtime.run(8, lambda k: ds.stacked_batch(4, rng2), eval_batch, eval_every=4)
+    np.testing.assert_allclose(h1.loss, h2.loss)
+    np.testing.assert_allclose(h1.wallclock, h2.wallclock)
+    np.testing.assert_allclose(h1.accuracy, h2.accuracy)
+    assert h1.iterations == h2.iterations
+
+
+# ---------------------------------------------------------------------------
+# RoundScheduler vs. sequential per-iteration SPMD steps
+# ---------------------------------------------------------------------------
+
+def test_round_scheduler_matches_sequential_steps(fed_data):
+    ds, _ = fed_data
+    model = MnistCNN()
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=2, tau2=2, alpha=2,
+                learning_rate=0.05)
+    rng = np.random.default_rng(3)
+    n = fl.tau1 * fl.tau2 * 2  # two full rounds
+    batches = [ds.stacked_batch(4, rng) for _ in range(n)]
+
+    runtime = make_run({
+        "scheduler": "round", "model": model, "fl": fl,
+        "optimizer": optim.sgd(0.05), "latency": MNIST_LATENCY, "seed": 1,
+    })
+    losses_round = []
+    for _ in range(2):
+        ev = runtime.step(lambda k: batches[k - 1])
+        assert ev.kind == "round"
+        losses_round.extend(ev.losses.tolist())
+    assert runtime.iteration == n
+
+    # reference: per-iteration jitted steps through the event schedule
+    proto = fl.protocol()
+    steps = {e: jax.jit(build_fl_train_step(model, optim.sgd(0.05), fl, event=e))
+             for e in ("local", "intra", "inter")}
+    p, s = init_stacked(model, 8, jax.random.PRNGKey(1)), ()
+    losses_iter = []
+    for k in range(1, n + 1):
+        b = jax.tree.map(jnp.asarray, batches[k - 1])
+        p, s, loss = steps[proto.event_at(k)](p, s, b)
+        losses_iter.append(float(loss))
+
+    np.testing.assert_allclose(losses_round, losses_iter, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(runtime.scheduler.params), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+def test_round_scheduler_clock_matches_sync_schedule():
+    """Round wall-clock == sum of per-event §V-B iteration times."""
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=3, tau2=2, alpha=2,
+                learning_rate=0.05)
+    runtime = make_run({
+        "scheduler": "round", "model": MnistCNN(), "fl": fl,
+        "latency": MNIST_LATENCY, "seed": 0,
+    })
+    proto = fl.protocol()
+    expected = 0.0
+    for k in range(1, fl.tau1 * fl.tau2 + 1):
+        event = proto.event_at(k)
+        expected += MNIST_LATENCY.t_comp()
+        if event in ("intra", "inter"):
+            expected += MNIST_LATENCY.t_comm_client_server()
+        if event == "inter":
+            expected += fl.alpha * MNIST_LATENCY.t_comm_server_server()
+    assert np.isclose(runtime.scheduler.round_time(), expected)
+
+
+# ---------------------------------------------------------------------------
+# AsyncScheduler vs. independent event-queue simulation + legacy facade
+# ---------------------------------------------------------------------------
+
+def test_async_scheduler_event_order_and_gaps(fed_data):
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    speeds = make_speeds(8, 5.0, seed=4)
+    cfg = AsyncConfig(clusters=spec, topology=ring(4), speeds=speeds,
+                      learning_rate=0.05, min_batches=2, theta_max=6)
+    runtime = make_run({
+        "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+        "min_batches": 2, "theta_max": 6, "seed": 0,
+    })
+
+    # independent heap simulation of the Lemma-4 event schedule
+    iter_times = cfg.iter_times()
+    queue = [(iter_times[j], j) for j in range(4)]
+    heapq.heapify(queue)
+    last_update = np.zeros(4, dtype=np.int64)
+    batcher = ClientBatcher(ds, 4, seed=0)
+    for t in range(1, 21):
+        clock_ref, d_ref = heapq.heappop(queue)
+        heapq.heappush(queue, (clock_ref + iter_times[d_ref], d_ref))
+        last_update[d_ref] = t
+
+        ev = runtime.step(batcher)
+        assert ev.cluster == d_ref
+        assert ev.iteration == t
+        assert np.isclose(runtime.clock, clock_ref)
+        # staleness gaps seen by the mixing matrix == the simulated ones
+        np.testing.assert_array_equal(runtime.scheduler.last_update, last_update)
+
+
+def test_async_shim_matches_runtime(fed_data):
+    ds, eval_batch = fed_data
+    spec = _cluster_spec(ds)
+    speeds = make_speeds(8, 4.0, seed=5)
+    cfg = AsyncConfig(clusters=spec, topology=ring(4), speeds=speeds,
+                      learning_rate=0.05, min_batches=2, theta_max=6)
+    with pytest.deprecated_call():
+        eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    runtime = make_run({
+        "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+        "min_batches": 2, "theta_max": 6, "seed": 0,
+    })
+    h1 = eng.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
+    h2 = runtime.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
+    np.testing.assert_allclose(h1.loss, h2.loss)
+    np.testing.assert_allclose(h1.wallclock, h2.wallclock)
+    assert eng.t == runtime.scheduler.t == 10
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+# ---------------------------------------------------------------------------
+
+def test_make_run_rejects_unknown_scheduler_and_keys(fed_data):
+    ds, _ = fed_data
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        make_run({"scheduler": "semi-async", "model": MnistCNN()})
+    with pytest.raises(TypeError, match="unused scenario keys"):
+        make_run({"scheduler": "sync", "model": MnistCNN(),
+                  "clusters": _cluster_spec(ds), "topolgy": "ring"})
+
+
+def test_register_scheduler_plugin(fed_data):
+    """New regimes plug in without touching the runtime."""
+    ds, eval_batch = fed_data
+
+    class EveryStepAverage:
+        """Toy scheduler: local SGD then full averaging every iteration."""
+
+        name = "toy-average"
+
+        def bind(self, model, seed):
+            from repro.core.runtime import stacked_init
+            self.model = model
+            self.params = stacked_init(model, 8, seed)
+            self._grad = jax.jit(jax.vmap(jax.grad(model.loss)))
+
+        def step(self, k, batch_source):
+            b = jax.tree.map(jnp.asarray, batch_source(k))
+            g = self._grad(self.params, b)
+            self.params = jax.tree.map(
+                lambda p, gi: (p - 0.05 * gi).mean(0, keepdims=True).repeat(8, 0),
+                self.params, g)
+            return StepEvent(kind="avg", iteration=k, dt=1.0)
+
+        def global_params(self):
+            return jax.tree.map(lambda p: p[0], self.params)
+
+    try:
+        @register_scheduler("toy")
+        def _make_toy(s):
+            return EveryStepAverage()
+
+        runtime = make_run({"scheduler": "toy", "model": MnistCNN()})
+        assert isinstance(runtime, FederationRuntime)
+        rng = np.random.default_rng(7)
+        hist = runtime.run(6, lambda k: ds.stacked_batch(4, rng),
+                           eval_batch, eval_every=3)
+        assert len(hist.loss) == 2 and np.isfinite(hist.loss).all()
+        assert hist.wallclock[-1] == 6.0
+        assert hist.loss[-1] < hist.loss[0] * 1.05
+    finally:
+        SCHEDULER_REGISTRY.pop("toy", None)
