@@ -1,0 +1,111 @@
+"""AggregationBackend throughput: dense vs collective vs Pallas per model size.
+
+Measures the full Lemma-1 ``inter`` transition (``W <- W @ V P^alpha B``) on
+client-stacked parameter trees from MnistCNN up to reduced transformer
+configs, and emits:
+
+* CSV rows (``figure=agg_backends``) via the shared ``emit`` machinery;
+* ``BENCH_agg_backends.json`` in the results dir — one record per
+  (model, backend) with measured us/GB/s and the analytic v5e projection.
+
+On this CPU container the dense and collective (vmap-emulated ppermute)
+paths are real jitted wall-clock; the Pallas fused kernel runs in
+interpret mode, which measures correctness-path overhead rather than TPU
+speed, so it is only timed on the small config (all configs with
+``REPRO_BENCH_FULL=1``).  The projected v5e numbers compare HBM bytes:
+the fused kernel moves exactly read+write of W, while the staged path
+(cluster_agg + alpha gossip rounds + broadcast) re-materializes the (D, M)
+cluster intermediate per stage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ClusterSpec, mixing_matrix, ring
+from repro.core.backends import BACKEND_REGISTRY
+from repro.core.runtime import stacked_init
+from repro.models import MnistCNN
+
+from .common import RESULTS, emit, ensure_results
+
+HBM_BW = 819e9   # v5e
+C, D, ALPHA = 8, 4, 2
+JSON_PATH = os.path.join(RESULTS, "BENCH_agg_backends.json")
+
+
+def _time_transition(backend, stacked, iters=3):
+    out = backend.transition(stacked, "inter")
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = backend.transition(stacked, "inter")
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def _model_trees():
+    from repro.configs import get_config
+    from repro.models import CausalLM
+
+    full = os.environ.get("REPRO_BENCH_FULL") == "1"
+    yield "mnist_cnn", MnistCNN(), True
+    yield "qwen2.5-3b-reduced", CausalLM(get_config("qwen2.5-3b").reduced()), full
+    if full:
+        yield "gemma2-2b-reduced", CausalLM(get_config("gemma2-2b").reduced()), True
+
+
+def main():
+    ensure_results()
+    spec = ClusterSpec.uniform(C, D)
+    p = mixing_matrix(ring(D), spec.m_tilde())
+    records = []
+    res = {}
+    for model_name, model, time_pallas in _model_trees():
+        stacked = stacked_init(model, C, 0)
+        m = sum(x.size for x in jax.tree.leaves(stacked)) // C
+        stacked = jax.tree.map(jnp.asarray, stacked)
+        bytes_w = 2 * C * m * 4  # one read + one write of the stacked f32 tree
+        # staged path: intra (C+D), alpha gossip rounds (2D each), broadcast (D+C)
+        bytes_staged = ((C + D) + 2 * ALPHA * D + (D + C)) * m * 4
+        for name in ("dense", "collective", "pallas"):
+            backend = BACKEND_REGISTRY[name](
+                spec, p, ALPHA, tile_m=4096 if name == "pallas" else 512
+            )
+            measured_us = None
+            if name != "pallas" or time_pallas:
+                measured_us = _time_transition(backend, stacked)
+                gbps = bytes_w / (measured_us * 1e-6) / 1e9
+                emit("agg_backends", f"{name}_cpu", model_name, "us_per_transition",
+                     measured_us)
+                emit("agg_backends", f"{name}_cpu", model_name, "gbps", gbps)
+            proj_bytes = bytes_w if name == "pallas" else bytes_staged
+            proj_ms = proj_bytes / HBM_BW * 1e3
+            emit("agg_backends", f"{name}_v5e", model_name, "projected_ms", proj_ms)
+            records.append({
+                "model": model_name,
+                "params_per_client": int(m),
+                "backend": name,
+                "clients": C,
+                "clusters": D,
+                "alpha": ALPHA,
+                "measured_us": measured_us,
+                "measured_gbps": (
+                    bytes_w / (measured_us * 1e-6) / 1e9 if measured_us else None
+                ),
+                "projected_v5e_ms": proj_ms,
+            })
+        res[f"{model_name}_fused_bytes_saving"] = bytes_staged / bytes_w
+    with open(JSON_PATH, "w") as f:
+        json.dump({"clients": C, "clusters": D, "alpha": ALPHA,
+                   "hbm_bw": HBM_BW, "records": records}, f, indent=2)
+    res["json"] = JSON_PATH
+    return res
+
+
+if __name__ == "__main__":
+    main()

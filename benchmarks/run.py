@@ -18,7 +18,10 @@ import traceback
 def main() -> None:
     import os
 
-    from . import beyond_paper, cifar_task, figures, kernels_bench, moe_ablation, roofline_report
+    from . import (
+        agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
+        moe_ablation, roofline_report,
+    )
 
     registry = {
         "fig4_5": figures.fig4_5_convergence_vs_baselines,
@@ -30,6 +33,7 @@ def main() -> None:
         "fig11": figures.fig11_lr_imbalance,
         "table1": figures.table1_latency,
         "kernels": kernels_bench.main,
+        "agg_backends": agg_backends.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,
         "cifar": cifar_task.main,

@@ -3,6 +3,10 @@ from .topology import Topology, ring, star, fully_connected, chain, partially_co
 from .protocol import ClusterSpec, SDFEELConfig, transition_matrix
 from .staleness import psi_inverse, psi_constant, psi_exponential, staleness_mixing_matrix
 from .aggregation import apply_transition_dense, stack_clients, unstack_clients
+from .backends import (
+    AggregationBackend, DenseBackend, PallasBackend, CollectiveBackend,
+    BACKEND_REGISTRY, register_backend, resolve_backend, select_auto_backend,
+)
 from .latency import LatencyModel, MNIST_LATENCY, CIFAR_LATENCY
 from .runtime import (
     FederationRuntime, Scheduler, StepEvent, SyncScheduler, RoundScheduler,
@@ -19,6 +23,9 @@ __all__ = [
     "ClusterSpec", "SDFEELConfig", "transition_matrix",
     "psi_inverse", "psi_constant", "psi_exponential", "staleness_mixing_matrix",
     "apply_transition_dense", "stack_clients", "unstack_clients",
+    "AggregationBackend", "DenseBackend", "PallasBackend", "CollectiveBackend",
+    "BACKEND_REGISTRY", "register_backend", "resolve_backend",
+    "select_auto_backend",
     "LatencyModel", "MNIST_LATENCY", "CIFAR_LATENCY",
     "FederationRuntime", "Scheduler", "StepEvent", "SyncScheduler",
     "RoundScheduler", "AsyncScheduler", "make_run", "register_scheduler",

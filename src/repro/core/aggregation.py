@@ -17,8 +17,16 @@ on a pytree of client-stacked parameters ``(C, ...)``:
     repeated ``alpha`` times — the ring edge-server graph of the paper maps
     1:1 onto the TPU ICI ring.
 
-Equivalence of the two paths (for ring topologies and power-of-two cluster
-sizes) is asserted in tests/test_aggregation.py.
+These are the raw operators; the scheduler-facing interface over them is
+``backends.py`` (``AggregationBackend``: ``dense`` wraps the einsum,
+``collective`` wraps the ppermute path — under ``shard_map`` on a mesh or
+``vmap`` emulation off it — and ``pallas`` wraps the fused TPU kernels).
+Pick one per scenario via ``make_run({..., "backend": ...})``; the selection
+table lives in the README and the ``backends`` module docstring.
+
+Equivalence of all paths (for ring topologies and power-of-two cluster
+sizes; dense vs Pallas everywhere else) is asserted in
+tests/test_aggregation.py.
 """
 from __future__ import annotations
 
@@ -93,10 +101,16 @@ def hypercube_cluster_allreduce(
     Cost: log2(c) ppermute steps of one model shard each — vs. the dense
     path's all-gather of C model shards.
     """
-    if cluster_size & (cluster_size - 1):
-        raise ValueError("cluster_size must be a power of two for the hypercube path")
+    if cluster_size < 1 or (cluster_size & (cluster_size - 1)):
+        raise ValueError(
+            f"cluster_size={cluster_size} must be a power of two for the "
+            f"hypercube all-reduce (XOR partners); use the dense backend for "
+            f"other cluster sizes (backend='auto' falls back automatically)"
+        )
     if axis_size % cluster_size:
-        raise ValueError("cluster_size must divide axis_size")
+        raise ValueError(
+            f"cluster_size={cluster_size} must divide axis_size={axis_size}"
+        )
     acc = x * weight
     step = 1
     while step < cluster_size:

@@ -1,0 +1,449 @@
+"""Pluggable aggregation backends: one Lemma-1 transition, three fast paths.
+
+Every training regime in this repo ultimately applies the same linear
+operator — the Lemma-1 transition ``W <- W @ T_k`` with
+``T_k in {I, V B, V P^alpha B}`` — to a client-stacked pytree.  Before this
+module each scheduler hard-wired its own implementation (dense einsum in
+``SyncScheduler``/``round_engine``, ad-hoc Pallas routing in
+``SyncScheduler``, shard_map collectives locked inside
+``build_fl_train_step``).  ``AggregationBackend`` is the one interface over
+all of them; schedulers receive a backend instance and never touch
+aggregation code again.
+
+The interface (``C`` clients, ``D`` clusters)::
+
+    intra_cluster(stacked, weights)  (C, ...) -> (D, ...)   eq. 2-3 reduce
+    inter_cluster(y, p, alpha)       (D, ...) -> (D, ...)   eq. 4 / eq. 21-22 mixing
+    transition(stacked, event)       (C, ...) -> (C, ...)   full Lemma-1 T_k
+
+Registered implementations:
+
+=================  ==========================================================
+``DenseBackend``   Paper-faithful einsum against the precomputed ``T_k``
+                   (and per-call mixing matrices for ``inter_cluster`` — the
+                   path the async staleness mixing ``P_t`` takes).  Works for
+                   any ``ClusterSpec``/topology; the reference for all
+                   equivalence tests.
+``PallasBackend``  Routes ``intra_cluster``/``inter_cluster`` through the
+                   ``cluster_agg``/``gossip_mix`` TPU kernels and applies
+                   ``transition`` with the fused ``V P^alpha B`` kernel, so
+                   the (D, M) cluster intermediate never touches HBM.
+                   Requires contiguous uniform clusters (C % D == 0).
+``CollectiveBackend``  The structured shard_map path: weighted hypercube
+                   all-reduce (log2(g) ppermutes) + alpha ring-ppermute
+                   gossip rounds.  With a device mesh it runs as real ICI
+                   collectives; without one it runs the *same* collective
+                   code under ``vmap(axis_name=...)`` emulation, so it is
+                   usable (and testable) from any scheduler, not just the
+                   SPMD per-iteration step.  Requires a ring mixing stencil,
+                   contiguous uniform clusters of power-of-two size, D >= 3.
+=================  ==========================================================
+
+``resolve_backend("auto", ...)`` picks by device mesh and cluster-size
+divisibility: collective when a mesh spans the client axis and the collective
+constraints hold, pallas on TPU with divisible clusters, dense otherwise
+(including the non-power-of-two-cluster fallback).
+
+New backends plug in via ``register_backend`` and become selectable from
+``make_run({..., "backend": "<name>"})`` without touching any scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregation import (
+    apply_transition_dense,
+    dense_gossip_reference,
+    hypercube_cluster_allreduce,
+    ring_gossip,
+    ring_mixing_weights,
+)
+from .protocol import AggregationEvent, ClusterSpec
+
+PyTree = Any
+
+__all__ = [
+    "AggregationBackend",
+    "DenseBackend",
+    "PallasBackend",
+    "CollectiveBackend",
+    "BACKEND_REGISTRY",
+    "register_backend",
+    "resolve_backend",
+    "select_auto_backend",
+    "collective_supported",
+]
+
+
+@runtime_checkable
+class AggregationBackend(Protocol):
+    """One implementation of the Lemma-1 transition and its two factors."""
+
+    name: str
+
+    def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree: ...
+
+    def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int) -> PyTree: ...
+
+    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree: ...
+
+
+def _uniform_contiguous(clusters: ClusterSpec) -> bool:
+    """Clusters are contiguous, equally-sized blocks (the tiled-kernel layout)."""
+    c, d = clusters.num_clients, clusters.num_clusters
+    if c % d:
+        return False
+    g = c // d
+    return clusters.assignments == tuple(i // g for i in range(c))
+
+
+def _require_uniform_contiguous(clusters: ClusterSpec, backend: str) -> int:
+    if not _uniform_contiguous(clusters):
+        raise ValueError(
+            f"{backend} backend requires contiguous uniform clusters "
+            f"(C % D == 0, client i in cluster i // (C/D)); got "
+            f"assignments={clusters.assignments}"
+        )
+    return clusters.num_clients // clusters.num_clusters
+
+
+# ---------------------------------------------------------------------------
+# Dense (paper-faithful) backend
+# ---------------------------------------------------------------------------
+
+class DenseBackend:
+    """Lemma-1 einsums — correct everywhere, collective-hungry under pjit."""
+
+    name = "dense"
+
+    def __init__(self, clusters: ClusterSpec, p: np.ndarray, alpha: int, **_):
+        self.clusters = clusters
+        self.alpha = alpha
+        self._t = {
+            "intra": jnp.asarray(_t_matrix(clusters, p, alpha, "intra"), jnp.float32),
+            "inter": jnp.asarray(_t_matrix(clusters, p, alpha, "inter"), jnp.float32),
+        }
+        # B indicator (C, D) for weight-parametrized intra reduce
+        self._b_ind = jnp.asarray(clusters.B().T, jnp.float32)
+
+        @jax.jit
+        def _intra(stacked, weights):
+            v = self._b_ind * weights.astype(jnp.float32)[:, None]   # (C, D)
+            return jax.tree.map(
+                lambda w: jnp.einsum(
+                    "c...,cd->d...", w.astype(jnp.float32), v
+                ).astype(w.dtype),
+                stacked,
+            )
+
+        self._intra = _intra
+
+        # matrix_power on the tiny (D, D) P, then ONE tree sweep — not alpha
+        # full HBM passes over the model
+        self._inter = jax.jit(
+            dense_gossip_reference, static_argnames=("alpha",)
+        )
+        self._apply = jax.jit(apply_transition_dense)
+
+    def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree:
+        return self._intra(stacked, weights)
+
+    def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int = 1) -> PyTree:
+        return self._inter(y, jnp.asarray(p), alpha=alpha)
+
+    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+        if event == "local":
+            return stacked
+        return self._apply(stacked, self._t[event])
+
+
+def _t_matrix(clusters: ClusterSpec, p: np.ndarray, alpha: int,
+              event: AggregationEvent) -> np.ndarray:
+    """Lemma-1 T_k from raw factors (protocol.transition_matrix needs a config)."""
+    v, b = clusters.V(), clusters.B()
+    if event == "intra":
+        return v @ b
+    return v @ np.linalg.matrix_power(np.asarray(p, np.float64), alpha) @ b
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel backend
+# ---------------------------------------------------------------------------
+
+class PallasBackend:
+    """Tiled TPU kernels; fused V P^alpha B for the full transition.
+
+    ``interpret`` defaults to True off-TPU so the same code path is testable
+    on CPU runners.
+    """
+
+    name = "pallas"
+
+    def __init__(self, clusters: ClusterSpec, p: np.ndarray, alpha: int,
+                 interpret: Optional[bool] = None, tile_m: int = 512, **_):
+        self.clusters = clusters
+        self.alpha = alpha
+        self.interpret = (
+            jax.default_backend() != "tpu" if interpret is None else interpret
+        )
+        self.tile_m = tile_m
+        self._vt = jnp.asarray(clusters.V().T, jnp.float32)   # (D, C)
+        self._bt = jnp.asarray(clusters.B().T, jnp.float32)   # (C, D)
+        self._p = jnp.asarray(p, jnp.float32)
+
+    def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree:
+        from repro.kernels import cluster_agg_tree
+
+        # the (g, TM)-tiled reduce assumes the contiguous uniform layout
+        _require_uniform_contiguous(self.clusters, "pallas")
+        return cluster_agg_tree(
+            stacked, jnp.asarray(weights, jnp.float32),
+            self.clusters.num_clusters,
+            interpret=self.interpret, tile_m=self.tile_m,
+        )
+
+    def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int = 1) -> PyTree:
+        from repro.kernels import gossip_mix_tree
+
+        return gossip_mix_tree(
+            y, jnp.asarray(p, jnp.float32), alpha=alpha,
+            interpret=self.interpret, tile_m=self.tile_m,
+        )
+
+    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+        from repro.kernels import fused_transition_tree
+
+        if event == "local":
+            return stacked
+        # alpha=0 skips the mixing stage: V B.  The (D, M) intermediate stays
+        # in VMEM either way.
+        alpha = self.alpha if event == "inter" else 0
+        return fused_transition_tree(
+            stacked, self._vt, self._p, self._bt, alpha=alpha,
+            interpret=self.interpret, tile_m=self.tile_m,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Structured collective backend (shard_map on a mesh, vmap emulation off it)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("axis_name", "axis_size", "cluster_size", "alpha", "event"),
+)
+def _vmapped_transition(tree, m_hat, wl, ws, wr, *, axis_name, axis_size,
+                        cluster_size, alpha, event):
+    def per_client(x, w, l, s, r):
+        y = hypercube_cluster_allreduce(x, axis_name, axis_size, cluster_size, w)
+        if event == "inter":
+            y = ring_gossip(y, axis_name, axis_size, cluster_size, l, s, r, alpha)
+        return y.astype(x.dtype)
+
+    vm = jax.vmap(per_client, in_axes=(0, 0, None, None, None), axis_name=axis_name)
+    return jax.tree.map(lambda leaf: vm(leaf, m_hat, wl, ws, wr), tree)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("axis_name", "axis_size", "alpha")
+)
+def _vmapped_gossip(tree, wl, ws, wr, *, axis_name, axis_size, alpha):
+    def per_cluster(x, l, s, r):
+        return ring_gossip(x, axis_name, axis_size, 1, l, s, r, alpha).astype(x.dtype)
+
+    vm = jax.vmap(per_cluster, in_axes=(0, None, None, None), axis_name=axis_name)
+    return jax.tree.map(lambda leaf: vm(leaf, wl, ws, wr), tree)
+
+
+class CollectiveBackend:
+    """Hypercube all-reduce + ring ppermute gossip over the client axis.
+
+    With ``mesh``/``param_specs`` the transition runs under ``shard_map`` as
+    real collectives (one client per ``axis_name`` mesh index, bytes
+    proportional to one model instead of C).  Without a mesh the identical
+    per-device function runs under ``vmap`` with the same ``axis_name`` —
+    JAX lowers the ppermutes to gathers, so every scheduler (and every CPU
+    test) exercises the collective code path.
+    """
+
+    name = "collective"
+
+    def __init__(self, clusters: ClusterSpec, p: np.ndarray, alpha: int,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 param_specs: Optional[PyTree] = None,
+                 axis_name: Optional[str] = None, **_):
+        g = _require_uniform_contiguous(clusters, "collective")
+        if g & (g - 1):
+            raise ValueError(
+                f"collective backend requires power-of-two cluster sizes for the "
+                f"hypercube all-reduce; got cluster_size={g}"
+            )
+        d = clusters.num_clusters
+        if d < 3:
+            raise ValueError("collective ring gossip needs >= 3 clusters")
+        self.clusters = clusters
+        self.cluster_size = g
+        self.alpha = alpha
+        self.mesh = mesh
+        self.param_specs = param_specs
+        self.axis_name = axis_name or ("data" if mesh is not None else "clients")
+        # raises if P has support off the ring stencil (non-ring topology)
+        w_l, w_s, w_r = ring_mixing_weights(np.asarray(p, np.float64))
+        self._ring_w = tuple(jnp.asarray(w, jnp.float32) for w in (w_l, w_s, w_r))
+        self._m_hat = jnp.asarray(clusters.m_hat(), jnp.float32)
+
+    # -- full Lemma-1 transition, (C, ...) -> (C, ...) -----------------------
+    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+        if event == "local":
+            return stacked
+        wl, ws, wr = self._ring_w
+        c = self.clusters.num_clients
+        if self.mesh is not None:
+            return self._shard_map_transition(stacked, event)
+        return _vmapped_transition(
+            stacked, self._m_hat, wl, ws, wr,
+            axis_name=self.axis_name, axis_size=c,
+            cluster_size=self.cluster_size, alpha=self.alpha, event=event,
+        )
+
+    def _shard_map_transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+        from repro.sharding.compat import shard_map_compat
+
+        if self.param_specs is None:
+            raise ValueError("collective backend on a mesh needs param_specs")
+        wl, ws, wr = self._ring_w
+        c, g, alpha = self.clusters.num_clients, self.cluster_size, self.alpha
+        axis = self.axis_name
+        w_spec = jax.sharding.PartitionSpec(axis)
+
+        def agg(tree, m_hat_shard):
+            w = m_hat_shard.reshape(())  # (1,) shard -> scalar
+
+            def per_leaf(x):
+                y = hypercube_cluster_allreduce(x, axis, c, g, w)
+                if event == "inter":
+                    y = ring_gossip(y, axis, c, g, wl, ws, wr, alpha)
+                return y.astype(x.dtype)
+
+            return jax.tree.map(per_leaf, tree)
+
+        return shard_map_compat(
+            agg, mesh=self.mesh,
+            in_specs=(self.param_specs, w_spec), out_specs=self.param_specs,
+        )(stacked, self._m_hat)
+
+    # -- factors -------------------------------------------------------------
+    def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree:
+        c, g = self.clusters.num_clients, self.cluster_size
+        wl, ws, wr = self._ring_w
+        reduced = _vmapped_transition(
+            stacked, jnp.asarray(weights, jnp.float32), wl, ws, wr,
+            axis_name=self.axis_name, axis_size=c,
+            cluster_size=g, alpha=self.alpha, event="intra",
+        )
+        # every member of a cluster holds the reduced model; take the leads
+        return jax.tree.map(lambda leaf: leaf[::g], reduced)
+
+    def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int = 1) -> PyTree:
+        # P may change per call (async staleness mixing P_t) — re-derive the
+        # ring stencil weights on the host; raises off-ring.
+        wl, ws, wr = (
+            jnp.asarray(w, jnp.float32)
+            for w in ring_mixing_weights(np.asarray(p, np.float64))
+        )
+        return _vmapped_gossip(
+            y, wl, ws, wr, axis_name=self.axis_name,
+            axis_size=self.clusters.num_clusters, alpha=alpha,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry + auto selection
+# ---------------------------------------------------------------------------
+
+BACKEND_REGISTRY: dict[str, Callable[..., AggregationBackend]] = {}
+
+
+def register_backend(name: str):
+    """Register a backend factory ``(clusters, p, alpha, **kw) -> backend``."""
+
+    def deco(factory: Callable[..., AggregationBackend]):
+        BACKEND_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+register_backend("dense")(DenseBackend)
+register_backend("pallas")(PallasBackend)
+register_backend("collective")(CollectiveBackend)
+
+
+def collective_supported(clusters: ClusterSpec, p: np.ndarray) -> bool:
+    """Can CollectiveBackend represent this scenario?  (See class docstring.)"""
+    if not _uniform_contiguous(clusters) or clusters.num_clusters < 3:
+        return False
+    g = clusters.num_clients // clusters.num_clusters
+    if g & (g - 1):  # hypercube needs power-of-two cluster sizes
+        return False
+    try:
+        ring_mixing_weights(np.asarray(p, np.float64))
+    except ValueError:
+        return False
+    return True
+
+
+def select_auto_backend(clusters: ClusterSpec, p: np.ndarray,
+                        mesh: Optional[jax.sharding.Mesh] = None,
+                        axis_name: str = "data") -> str:
+    """Pick a backend name by device mesh and cluster-size divisibility.
+
+    * ``collective`` when a mesh axis spans the client axis one-to-one and
+      the scenario satisfies the collective constraints (ring stencil,
+      power-of-two uniform clusters) — the ICI-native path;
+    * ``pallas`` on TPU with contiguous uniform clusters (C % D == 0), where
+      the fused kernels beat the XLA einsum;
+    * ``dense`` everywhere else — including non-power-of-two or ragged
+      clusters, and CPU hosts where interpret-mode kernels would only slow
+      the einsum down.
+    """
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if sizes.get(axis_name) == clusters.num_clients and collective_supported(
+            clusters, p
+        ):
+            return "collective"
+    if jax.default_backend() == "tpu" and _uniform_contiguous(clusters):
+        return "pallas"
+    return "dense"
+
+
+def resolve_backend(spec, clusters: ClusterSpec, p: np.ndarray, alpha: int,
+                    **kwargs) -> AggregationBackend:
+    """Turn a backend spec into a bound instance.
+
+    ``spec`` is a registered name, ``"auto"``, ``None`` (== auto), or an
+    already-constructed backend (returned as-is).  ``kwargs`` are forwarded
+    to the factory (``mesh``, ``param_specs``, ``interpret``, ``tile_m``...).
+    """
+    if spec is None:
+        spec = "auto"
+    if not isinstance(spec, str):
+        return spec  # pre-built backend instance
+    name = spec
+    if name == "auto":
+        name = select_auto_backend(
+            clusters, p, mesh=kwargs.get("mesh"),
+            axis_name=kwargs.get("axis_name") or "data",
+        )
+    if name not in BACKEND_REGISTRY:
+        raise KeyError(
+            f"unknown aggregation backend {name!r}; registered: "
+            f"{sorted(BACKEND_REGISTRY)}"
+        )
+    return BACKEND_REGISTRY[name](clusters, np.asarray(p, np.float64), alpha, **kwargs)

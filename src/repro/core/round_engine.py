@@ -25,11 +25,8 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..optim import Optimizer
-from .aggregation import apply_transition_dense
-from .protocol import transition_matrix
 from .sdfeel import FLSpec
 
 PyTree = Any
@@ -37,15 +34,19 @@ PyTree = Any
 __all__ = ["build_fl_round_step"]
 
 
-def build_fl_round_step(model, opt: Optimizer, fl: FLSpec):
+def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None):
     """Returns round_step(params, opt_state, batches) -> (params, opt_state, losses).
 
     ``batches`` leaves: (tau1 * tau2, C, per_client_batch, ...); ``losses``:
-    (tau1 * tau2,) mean loss per iteration.
+    (tau1 * tau2,) mean loss per iteration.  ``backend`` is any
+    ``AggregationBackend`` (default: dense Lemma-1 einsum); its traced
+    ``transition`` is inlined into the compiled round.
     """
+    from .backends import resolve_backend
+
     proto = fl.protocol()
-    t_intra = jnp.asarray(transition_matrix(proto, "intra"), jnp.float32)
-    t_inter = jnp.asarray(transition_matrix(proto, "inter"), jnp.float32)
+    if backend is None:
+        backend = resolve_backend("dense", proto.clusters, proto.P(), fl.alpha)
     tau1, tau2 = fl.tau1, fl.tau2
 
     def local_iter(carry, batch):
@@ -61,7 +62,7 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec):
     def segment(carry, seg_batches):
         # tau1 local iterations then one intra-cluster aggregation
         (params, opt_state), losses = jax.lax.scan(local_iter, carry, seg_batches)
-        params = apply_transition_dense(params, t_intra)
+        params = backend.transition(params, "intra")
         return (params, opt_state), losses
 
     def round_step(params, opt_state, batches):
@@ -72,7 +73,7 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec):
         # The last segment applied T_intra = V B; composing with
         # T_inter = V P^a B is exact because B V = I_D (each cluster's
         # aggregate re-aggregates to itself): T_intra @ T_inter = T_inter.
-        params = apply_transition_dense(params, t_inter)
+        params = backend.transition(params, "inter")
         return params, opt_state, losses.reshape(tau1 * tau2)
 
     return round_step

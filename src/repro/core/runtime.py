@@ -28,9 +28,11 @@ Scheduler             Paper mapping
                       mixing matrix ``P_t`` (eqs. 21-22).
 ====================  =====================================================
 
-New regimes (e.g. the semi-async deadline sampling of arXiv:2104.12678)
-plug in via ``register_scheduler`` and become available to the config-driven
-scenario factory ``make_run`` without touching the runtime::
+Every scheduler applies the Lemma-1 transition through an injected
+``AggregationBackend`` (see ``backends.py``): ``dense`` (paper-faithful
+einsum), ``pallas`` (fused TPU kernels), or ``collective`` (hypercube +
+ring-ppermute collectives).  The scenario key ``"backend"`` selects one;
+``"auto"`` picks by device mesh and cluster-size divisibility::
 
     runtime = make_run({
         "scheduler": "sync",
@@ -39,8 +41,14 @@ scenario factory ``make_run`` without touching the runtime::
         "topology": "ring",
         "tau1": 5, "alpha": 1,
         "latency": MNIST_LATENCY,
+        "backend": "auto",        # or "dense" | "pallas" | "collective"
     })
     history = runtime.run(200, batch_fn, eval_batch, eval_every=20)
+
+New regimes (e.g. the semi-async deadline sampling of arXiv:2104.12678)
+plug in via ``register_scheduler`` and become available to the config-driven
+scenario factory ``make_run`` without touching the runtime — and, because
+aggregation goes through the backend layer, they inherit every fast path.
 
 The legacy entry points (``SDFEELSimulator``, ``AsyncSDFEEL``) remain as
 deprecated shims delegating here.
@@ -55,11 +63,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aggregation import apply_transition_dense
+from .backends import collective_supported, resolve_backend
 from .latency import LatencyModel
-from .protocol import SDFEELConfig, transition_matrix
+from .protocol import SDFEELConfig
 from .staleness import staleness_mixing_matrix
-from .topology import TOPOLOGIES, Topology
+from .topology import TOPOLOGIES, Topology, mixing_matrix
 
 PyTree = Any
 
@@ -162,27 +170,46 @@ class Scheduler(Protocol):
 # Synchronous per-iteration scheduler (Algorithm 1)
 # ---------------------------------------------------------------------------
 
+def _legacy_impl_backend(impl: str, clusters, p) -> str:
+    """Map the legacy ``aggregation_impl``/``impl`` field to a backend name.
+
+    ``"gossip"`` historically fell back to the dense einsum in the host-loop
+    schedulers (it was only honored inside ``build_fl_train_step``), so it
+    maps to the collective backend only when the scenario satisfies its
+    constraints and degrades to dense otherwise — old configs keep working.
+    """
+    if impl == "gossip":
+        return "collective" if collective_supported(clusters, p) else "dense"
+    return {"dense": "dense", "pallas": "pallas"}[impl]
+
+
 class SyncScheduler:
     """Algorithm 1 over stacked client models (host loop, CPU-friendly).
 
     ``batch_source`` contract: callable ``k -> stacked batch`` with leaves of
-    shape (C, per_client_batch, ...).
+    shape (C, per_client_batch, ...).  ``backend`` is an
+    ``AggregationBackend`` name/instance (or ``"auto"``); when omitted it is
+    derived from the legacy ``cfg.aggregation_impl`` field.
     """
 
     name = "sync"
 
-    def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None):
+    def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
+                 backend=None):
         self.cfg = cfg
         self.latency = latency
         self.params: PyTree = None
+        self._backend_spec = backend
 
     def bind(self, model, seed: int) -> None:
         cfg = self.cfg
         self.model = model
         self.params = stacked_init(model, cfg.clusters.num_clients, seed)
-        self._t_intra = jnp.asarray(transition_matrix(cfg, "intra"), jnp.float32)
-        self._t_inter = jnp.asarray(transition_matrix(cfg, "inter"), jnp.float32)
         self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
+        spec = self._backend_spec
+        if spec is None:
+            spec = _legacy_impl_backend(cfg.aggregation_impl, cfg.clusters, cfg.P())
+        self.backend = resolve_backend(spec, cfg.clusters, cfg.P(), cfg.alpha)
         lr = cfg.learning_rate
 
         def local_step(params, batch):
@@ -190,29 +217,6 @@ class SyncScheduler:
             return jax.tree.map(lambda p, g: p - lr * g, params, grads)
 
         self._local_step = jax.jit(local_step)
-        if cfg.aggregation_impl == "pallas":
-            # Pallas path (interpret=True on CPU): intra-cluster weighted
-            # reduce + alpha fused gossip rounds as TPU kernels.
-            from repro.kernels import cluster_agg_tree, gossip_mix_tree
-
-            spec, p_mat = cfg.clusters, jnp.asarray(cfg.P(), jnp.float32)
-            m_hat = jnp.asarray(spec.m_hat(), jnp.float32)
-            b_mat = jnp.asarray(spec.B(), jnp.float32)
-            d_count = spec.num_clusters
-            alpha = cfg.alpha
-            interp = jax.default_backend() != "tpu"
-
-            def pallas_apply(stacked, event):
-                y = cluster_agg_tree(stacked, m_hat, d_count, interpret=interp)
-                if event == "inter":
-                    y = gossip_mix_tree(y, p_mat, alpha=alpha, interpret=interp)
-                # broadcast back to clients (B^T selection)
-                return jax.tree.map(
-                    lambda w: jnp.einsum("d...,di->i...", w, b_mat), y
-                )
-
-            self._pallas_apply = pallas_apply
-        self._apply_t = jax.jit(apply_transition_dense)
 
         def global_model(params):
             return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
@@ -225,11 +229,7 @@ class SyncScheduler:
         self.params = self._local_step(self.params, batch)
         event = self.cfg.event_at(k)
         if event in ("intra", "inter"):
-            if self.cfg.aggregation_impl == "pallas":
-                self.params = self._pallas_apply(self.params, event)
-            else:
-                t = self._t_intra if event == "intra" else self._t_inter
-                self.params = self._apply_t(self.params, t)
+            self.params = self.backend.transition(self.params, event)
         return event
 
     def iteration_time(self, event: str) -> float:
@@ -258,12 +258,14 @@ class RoundScheduler:
 
     name = "round"
 
-    def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None):
+    def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
+                 backend=None):
         self.fl = fl
         self.optimizer = optimizer
         self.latency = latency
         self.params: PyTree = None
         self.opt_state: PyTree = None
+        self._backend_spec = backend
 
     @property
     def iterations_per_round(self) -> int:
@@ -284,7 +286,17 @@ class RoundScheduler:
         self.optimizer = opt
         self.params = stacked_init(model, fl.num_clients, seed)
         self.opt_state = opt.init(self.params)
-        self._round_step = jax.jit(build_fl_round_step(model, opt, fl))
+        spec = self._backend_spec
+        if spec is None:
+            # the compiled round engine historically always used dense;
+            # honor impl="gossip" only where the collective path is valid
+            spec = _legacy_impl_backend(fl.impl, self._proto.clusters, self._proto.P())
+        self.backend = resolve_backend(
+            spec, self._proto.clusters, self._proto.P(), fl.alpha
+        )
+        self._round_step = jax.jit(
+            build_fl_round_step(model, opt, fl, backend=self.backend)
+        )
 
     def round_time(self) -> float:
         """Section V-B wall-clock of one full round."""
@@ -323,13 +335,16 @@ class AsyncScheduler:
     """Priority-queue cluster events with staleness-aware mixing.
 
     ``batch_source`` contract: an object with ``next_batch(client) -> batch``
-    (e.g. ``repro.data.ClientBatcher``).
+    (e.g. ``repro.data.ClientBatcher``).  The eq. 21-22 staleness mixing
+    ``P_t`` is applied through ``backend.inter_cluster``, so the async path
+    inherits whichever optimized mixing path the backend provides.
     """
 
     name = "async"
 
-    def __init__(self, cfg):
+    def __init__(self, cfg, backend=None):
         self.cfg = cfg
+        self._backend_spec = backend
 
     def bind(self, model, seed: int) -> None:
         cfg = self.cfg
@@ -377,16 +392,10 @@ class AsyncScheduler:
             )
 
         self._cluster_update = jax.jit(cluster_update)
-
-        def mix(y, p_t):
-            return jax.tree.map(
-                lambda w: jnp.einsum(
-                    "d...,dj->j...", w.astype(jnp.float32), p_t
-                ).astype(w.dtype),
-                y,
-            )
-
-        self._mix = jax.jit(mix)
+        self.backend = resolve_backend(
+            self._backend_spec, cfg.clusters,
+            mixing_matrix(cfg.topology, cfg.clusters.m_tilde()), 1,
+        )
 
         def global_model(y):
             return jax.tree.map(lambda w: jnp.einsum("d...,d->...", w, self._m_tilde), y)
@@ -418,11 +427,11 @@ class AsyncScheduler:
         y_hat_d = self._cluster_update(y_d, batches, thetas, m_hat)
         y = jax.tree.map(lambda w, yh: w.at[d].set(yh), self.y, y_hat_d)
 
-        # staleness-aware inter-cluster mixing (eq. 21-22)
+        # staleness-aware inter-cluster mixing (eq. 21-22) via the backend
         gaps = (self.t - self.last_update).astype(np.float64)
         gaps[d] = 0.0
         p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
-        self.y = self._mix(y, jnp.asarray(p_t, jnp.float32))
+        self.y = self.backend.inter_cluster(y, jnp.asarray(p_t, jnp.float32), 1)
 
         self.t += 1
         self.last_update[d] = self.t
@@ -553,7 +562,9 @@ def _make_sync(s: dict) -> SyncScheduler:
         learning_rate=s.pop("learning_rate", 0.01),
         aggregation_impl=s.pop("aggregation_impl", "dense"),
     )
-    return SyncScheduler(cfg, latency=s.pop("latency", None))
+    return SyncScheduler(
+        cfg, latency=s.pop("latency", None), backend=s.pop("backend", None)
+    )
 
 
 @register_scheduler("round")
@@ -573,7 +584,8 @@ def _make_round(s: dict) -> RoundScheduler:
             topology=s.pop("topology", "ring"),
         )
     return RoundScheduler(
-        fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None)
+        fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None),
+        backend=s.pop("backend", None),
     )
 
 
@@ -605,7 +617,7 @@ def _make_async(s: dict) -> AsyncScheduler:
         psi=psi,
         alpha_latency=s.pop("latency", None),
     )
-    return AsyncScheduler(cfg)
+    return AsyncScheduler(cfg, backend=s.pop("backend", None))
 
 
 def make_run(scenario: dict) -> FederationRuntime:

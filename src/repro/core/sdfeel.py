@@ -9,9 +9,10 @@
   (one client replica per data index; the ``pod`` axis data-parallelizes each
   client's batch) and the model axes are tensor-parallel.  The aggregation
   event of the lowered step is static (``local`` / ``intra`` / ``inter``), so
-  the dry-run can lower the heaviest (inter) iteration.  Aggregation impl:
-  ``dense`` (Lemma-1 einsum, paper-faithful) or ``gossip`` (structured
-  ppermute collectives — the beyond-paper optimized path).
+  the dry-run can lower the heaviest (inter) iteration.  The transition is
+  applied through an ``AggregationBackend`` (see ``backends.py``):
+  ``impl="dense"`` uses the Lemma-1 einsum backend, ``impl="gossip"`` the
+  shard_map ``CollectiveBackend`` (hypercube + ring-ppermute collectives).
 """
 from __future__ import annotations
 
@@ -23,14 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from ..optim import Optimizer
-from .aggregation import (
-    apply_transition_dense,
-    hypercube_cluster_allreduce,
-    ring_gossip,
-    ring_mixing_weights,
-)
+from .backends import resolve_backend
 from .latency import LatencyModel
-from .protocol import SDFEELConfig, transition_matrix
+from .protocol import SDFEELConfig
 from .runtime import TrainHistory  # noqa: F401  (re-exported for back-compat)
 
 PyTree = Any
@@ -152,55 +148,25 @@ def build_fl_train_step(
     ``params``/``opt_state`` carry a leading client axis of size
     ``fl.num_clients``.  ``batch`` leaves are (C, per_client_batch, ...).
     ``event`` statically selects which Lemma-1 transition the step applies.
-    ``mesh``/``param_specs`` are required for the ``gossip`` impl (shard_map).
+    ``mesh``/``param_specs`` are required for the ``gossip`` impl
+    (``CollectiveBackend`` under shard_map).
     """
     proto = fl.protocol()
-    t_np = transition_matrix(proto, event)
-    t_const = jnp.asarray(t_np, jnp.float32)
-    p_np = proto.P()
 
     if fl.impl == "gossip" and event != "local":
         if fl.topology != "ring" or fl.num_clusters < 3:
             raise ValueError("gossip impl supports ring topologies with >= 3 clusters")
-        w_l, w_s, w_r = ring_mixing_weights(p_np)
-        m_hat = proto.clusters.m_hat()
         if mesh is None or param_specs is None:
             raise ValueError("gossip impl needs mesh + param_specs")
-        client_axis = "data"
-        axis_size = fl.num_clients
-
-        from ..sharding.compat import shard_map_compat
-
-        def _aggregate(params):
-            def agg(tree):
-                def per_leaf(x):
-                    # local client dim is 1 on each data shard
-                    y = hypercube_cluster_allreduce(
-                        x, client_axis, axis_size, fl.cluster_size,
-                        jnp.float32(1.0 / fl.cluster_size),
-                    )
-                    if event == "inter":
-                        y = ring_gossip(
-                            y, client_axis, axis_size, fl.cluster_size,
-                            jnp.asarray(w_l, jnp.float32),
-                            jnp.asarray(w_s, jnp.float32),
-                            jnp.asarray(w_r, jnp.float32),
-                            fl.alpha,
-                        )
-                    return y.astype(x.dtype)
-
-                return jax.tree.map(per_leaf, tree)
-
-            return shard_map_compat(
-                agg, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs
-            )(params)
-
+        backend = resolve_backend(
+            "collective", proto.clusters, proto.P(), fl.alpha,
+            mesh=mesh, param_specs=param_specs,
+        )
     else:
+        backend = resolve_backend("dense", proto.clusters, proto.P(), fl.alpha)
 
-        def _aggregate(params):
-            if event == "local":
-                return params
-            return apply_transition_dense(params, t_const)
+    def _aggregate(params):
+        return backend.transition(params, event)
 
     def train_step(params, opt_state, batch):
         def client_loss(p, b):

@@ -7,12 +7,16 @@ pure-jnp oracle.  On this CPU container the kernels are validated with
 """
 from .gossip_mix import gossip_mix, gossip_mix_tree, gossip_mix_ref
 from .cluster_agg import cluster_agg, cluster_agg_tree, cluster_agg_ref
+from .fused_transition import (
+    fused_transition, fused_transition_tree, fused_transition_ref,
+)
 from .flash_attention import flash_attention, flash_attention_ref
 from .fused_sgd import sgd_update, normalized_update, sgd_update_tree
 
 __all__ = [
     "gossip_mix", "gossip_mix_tree", "gossip_mix_ref",
     "cluster_agg", "cluster_agg_tree", "cluster_agg_ref",
+    "fused_transition", "fused_transition_tree", "fused_transition_ref",
     "flash_attention", "flash_attention_ref",
     "sgd_update", "normalized_update", "sgd_update_tree",
 ]

@@ -1,0 +1,49 @@
+"""Shared flatten/pad/tile plumbing for the (rows, M) streaming kernels.
+
+``cluster_agg_tree``, ``gossip_mix_tree`` and ``fused_transition_tree`` all
+apply a Pallas kernel that expects a 2-D ``(rows, M)`` operand with ``M``
+divisible by the lane tile.  This helper owns the leaf bookkeeping they used
+to copy-paste: flatten each pytree leaf to ``(rows, M)``, pad ``M`` up to a
+multiple of ``tile_m``, run the kernel, strip the padding and restore the
+leaf shape.  When ``M % tile_m == 0`` both the pad and the unpad slice are
+skipped entirely — aligned leaves stream through untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["_tiled_tree_apply"]
+
+PyTree = Any
+
+
+def _tiled_tree_apply(
+    fn: Callable[[jax.Array], jax.Array],
+    tree: PyTree,
+    rows: int,
+    out_rows: int | None = None,
+    tile_m: int = 512,
+) -> PyTree:
+    """Apply ``fn: (rows, M_padded) -> (out_rows, M_padded)`` to every leaf.
+
+    ``rows`` is the leading (client/cluster) axis of each leaf; ``out_rows``
+    defaults to ``rows`` (shape-preserving kernels like gossip mixing) and
+    differs for reductions (``cluster_agg``: C clients -> D clusters).
+    """
+    out_rows = rows if out_rows is None else out_rows
+
+    def per_leaf(w):
+        m = int(w.size // rows)
+        flat = w.reshape(rows, m)
+        pad = (-m) % tile_m
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        out = fn(flat)
+        if pad:
+            out = out[:, :m]
+        return out.reshape((out_rows,) + w.shape[1:])
+
+    return jax.tree.map(per_leaf, tree)

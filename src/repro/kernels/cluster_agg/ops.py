@@ -4,8 +4,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from .._tiling import _tiled_tree_apply
 from .kernel import cluster_agg_pallas
 from .ref import cluster_agg_ref
 
@@ -24,15 +24,8 @@ def cluster_agg_tree(tree, weights, num_clusters: int, impl: str = "pallas",
                      interpret: bool = False, tile_m: int = 512):
     """Aggregate a (C, ...) stacked pytree into a (D, ...) pytree."""
     c = weights.shape[0]
-
-    def per_leaf(w):
-        m = int(w.size // c)
-        flat = w.reshape(c, m)
-        pad = (-m) % tile_m
-        if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        out = cluster_agg(flat, weights, num_clusters, impl=impl,
-                          interpret=interpret, tile_m=tile_m)
-        return out[:, :m].reshape((num_clusters,) + w.shape[1:])
-
-    return jax.tree.map(per_leaf, tree)
+    return _tiled_tree_apply(
+        lambda flat: cluster_agg(flat, weights, num_clusters, impl=impl,
+                                 interpret=interpret, tile_m=tile_m),
+        tree, rows=c, out_rows=num_clusters, tile_m=tile_m,
+    )

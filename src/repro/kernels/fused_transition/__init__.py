@@ -1,0 +1,8 @@
+from .kernel import fused_transition_kernel, fused_transition_pallas
+from .ops import fused_transition, fused_transition_tree
+from .ref import fused_transition_ref
+
+__all__ = [
+    "fused_transition_kernel", "fused_transition_pallas",
+    "fused_transition", "fused_transition_tree", "fused_transition_ref",
+]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused Lemma-1 transition  W <- W @ (V P^alpha B).
+
+The paper's inter-cluster aggregation event factors into three stages on the
+flattened (C, M) client-model matrix (M = model dim, typically huge):
+
+    Y  = V^T W        intra-cluster weighted reduce      (D, M)
+    Y' = (P^T)^a Y    alpha gossip rounds on clusters    (D, M)
+    W' = B^T Y'       broadcast back to cluster members  (C, M)
+
+Running these as separate kernels (``cluster_agg`` then ``gossip_mix`` then
+an einsum) writes and re-reads the (D, M) intermediate from HBM twice.  This
+kernel fuses all three on a VMEM-resident (C, TM) tile: the factor matrices
+``V^T`` (D, C), ``P`` (D, D) and ``B^T`` (C, D) are tiny and live in VMEM
+for every grid step, so HBM traffic is exactly one read + one write of W —
+the bandwidth lower bound for the transition.
+
+With ``alpha == 0`` the mixing stage is skipped and the kernel computes the
+intra-cluster event ``W @ (V B)`` instead.
+
+Block layout:
+    vt:      (D, C)   VMEM, replicated to every grid step
+    p:       (D, D)   VMEM, replicated
+    bt:      (C, D)   VMEM, replicated
+    w tile:  (C, TM)  VMEM, index (0, i)
+    out:     (C, TM)  VMEM, index (0, i)
+Grid: (M // TM,) — embarrassingly parallel over model tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_transition_kernel", "fused_transition_pallas"]
+
+
+def fused_transition_kernel(vt_ref, p_ref, bt_ref, w_ref, out_ref, *, alpha: int):
+    w = w_ref[...].astype(jnp.float32)          # (C, TM)
+    vt = vt_ref[...].astype(jnp.float32)        # (D, C)
+    y = jax.lax.dot_general(
+        vt, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (D, TM) — never leaves VMEM
+    if alpha:
+        p = p_ref[...].astype(jnp.float32)      # (D, D)
+        for _ in range(alpha):
+            # column convention: new[d] = sum_j p[j, d] y[j]  (P^T y)
+            y = jax.lax.dot_general(
+                p, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+    bt = bt_ref[...].astype(jnp.float32)        # (C, D)
+    out_ref[...] = jax.lax.dot_general(
+        bt, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)                     # (C, TM)
+
+
+def fused_transition_pallas(
+    w: jax.Array,
+    vt: jax.Array,
+    p: jax.Array,
+    bt: jax.Array,
+    alpha: int = 1,
+    tile_m: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """w: (C, M); vt: (D, C) = V^T; p: (D, D); bt: (C, D) = B^T. M % tile_m == 0."""
+    c, m = w.shape
+    d = p.shape[0]
+    if vt.shape != (d, c) or bt.shape != (c, d):
+        raise ValueError(f"factor shapes {vt.shape}/{bt.shape} inconsistent with "
+                         f"C={c}, D={d}")
+    if m % tile_m:
+        raise ValueError(f"M={m} must be divisible by tile_m={tile_m}")
+    return pl.pallas_call(
+        functools.partial(fused_transition_kernel, alpha=alpha),
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((d, c), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+            pl.BlockSpec((c, tile_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((c, tile_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c, m), w.dtype),
+        interpret=interpret,
+    )(vt, p, bt, w)

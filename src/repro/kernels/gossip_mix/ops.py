@@ -4,8 +4,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from .._tiling import _tiled_tree_apply
 from .kernel import gossip_mix_pallas
 from .ref import gossip_mix_ref
 
@@ -22,16 +22,10 @@ def gossip_mix(y, p, alpha: int = 1, impl: str = "pallas", interpret: bool = Fal
 def gossip_mix_tree(tree, p, alpha: int = 1, impl: str = "pallas", interpret: bool = False, tile_m: int = 512):
     """Apply gossip mixing to every leaf of a (D, ...) stacked pytree.
 
-    Leaves are flattened to (D, M) with M padded up to the tile size."""
-    d = p.shape[0]
-
-    def per_leaf(w):
-        m = int(w.size // d)
-        flat = w.reshape(d, m)
-        pad = (-m) % tile_m
-        if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        out = gossip_mix(flat, p, alpha=alpha, impl=impl, interpret=interpret, tile_m=tile_m)
-        return out[:, :m].reshape(w.shape)
-
-    return jax.tree.map(per_leaf, tree)
+    Leaves are flattened to (D, M); M is padded up to the tile size only when
+    it is not already a multiple of it."""
+    return _tiled_tree_apply(
+        lambda flat: gossip_mix(flat, p, alpha=alpha, impl=impl,
+                                interpret=interpret, tile_m=tile_m),
+        tree, rows=p.shape[0], tile_m=tile_m,
+    )

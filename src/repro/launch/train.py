@@ -41,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--tau2", type=int, default=1)
     ap.add_argument("--alpha", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "dense", "pallas", "collective"],
+                    help="aggregation backend for the Lemma-1 transition")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -64,6 +67,7 @@ def main(argv=None):
         "alpha": args.alpha,
         "learning_rate": args.lr,
         "seed": args.seed,
+        "backend": args.backend,
     })
     sched = runtime.scheduler
     ipr = sched.iterations_per_round

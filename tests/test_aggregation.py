@@ -1,0 +1,264 @@
+"""AggregationBackend equivalence: dense vs Pallas vs collective.
+
+The suite promised by core/aggregation.py.  Three layers:
+
+* operator level — ``transition`` / ``intra_cluster`` / ``inter_cluster``
+  agree across backends, parametrized over topology (ring/star/torus),
+  ``alpha`` in {1, 2} and non-uniform cluster weights (the collective
+  backend only claims ring scenarios; the others must agree everywhere);
+* constraint level — the hypercube path rejects non-power-of-two clusters
+  with a clear error and ``"auto"`` selection falls back to dense;
+* scenario level — the same seeded sync / round / async runs produce
+  identical (atol 1e-5) global models under every backend.
+
+All Pallas kernels run with interpret=True (CPU container).
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec, CollectiveBackend, DenseBackend, PallasBackend, make_run,
+    mixing_matrix, ring, star, torus_2d,
+)
+from repro.core.aggregation import hypercube_cluster_allreduce
+from repro.core.backends import collective_supported, resolve_backend, select_auto_backend
+from repro.data import ClientBatcher, FederatedDataset, iid_partition, mnist_like
+from repro.models import MnistCNN
+
+RNG = np.random.default_rng(0)
+
+TOPOLOGIES = {
+    "ring": lambda d: ring(d),
+    "star": lambda d: star(d),
+    "torus": lambda d: torus_2d(2, d // 2),
+}
+
+
+def _spec(c=8, d=4):
+    """Contiguous uniform clusters (g = c/d) with non-uniform data sizes."""
+    g = c // d
+    return ClusterSpec(
+        c, tuple(i // g for i in range(c)),
+        tuple(float(s) for s in RNG.uniform(0.5, 2.0, c)),
+    )
+
+
+def _tree(c):
+    return {
+        "w": jnp.asarray(RNG.normal(size=(c, 3, 7)), jnp.float32),
+        "b": jnp.asarray(RNG.normal(size=(c, 130)), jnp.float32),
+    }
+
+
+def _backends(spec, p, alpha):
+    out = {
+        "dense": DenseBackend(spec, p, alpha),
+        "pallas": PallasBackend(spec, p, alpha, interpret=True, tile_m=64),
+    }
+    if collective_supported(spec, p):
+        out["collective"] = CollectiveBackend(spec, p, alpha)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Operator-level equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha", [1, 2])
+@pytest.mark.parametrize("topo", ["ring", "star", "torus"])
+def test_transition_equivalence(topo, alpha):
+    spec = _spec(8, 4)
+    p = mixing_matrix(TOPOLOGIES[topo](4), spec.m_tilde())
+    backends = _backends(spec, p, alpha)
+    if topo == "ring":
+        assert "collective" in backends  # ring stencil must be recognized
+    tree = _tree(8)
+    for event in ("local", "intra", "inter"):
+        ref = backends["dense"].transition(tree, event)
+        for name, b in backends.items():
+            out = b.transition(tree, event)
+            for k in tree:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(ref[k]), atol=1e-5,
+                    err_msg=f"{name}/{event}/{k}",
+                )
+
+
+@pytest.mark.parametrize("alpha", [1, 2])
+def test_factor_equivalence_nonuniform_weights(alpha):
+    """intra_cluster / inter_cluster agree under non-uniform m^ weights."""
+    spec = _spec(8, 4)
+    p = mixing_matrix(ring(4), spec.m_tilde())
+    backends = _backends(spec, p, alpha)
+    tree = _tree(8)
+    weights = jnp.asarray(spec.m_hat(), jnp.float32)
+    ref = backends["dense"].intra_cluster(tree, weights)
+    for name, b in backends.items():
+        out = b.intra_cluster(tree, weights)
+        for k in tree:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(ref[k]), atol=1e-5,
+                err_msg=f"{name}/intra/{k}",
+            )
+    y = jax.tree.map(lambda v: v[:4], tree)
+    p_j = jnp.asarray(p, jnp.float32)
+    ref = backends["dense"].inter_cluster(y, p_j, alpha)
+    for name, b in backends.items():
+        out = b.inter_cluster(y, p_j, alpha)
+        for k in y:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(ref[k]), atol=1e-5,
+                err_msg=f"{name}/inter/{k}",
+            )
+
+
+def test_collective_unsupported_off_ring():
+    spec = _spec(8, 4)
+    assert not collective_supported(spec, mixing_matrix(star(4), spec.m_tilde()))
+
+
+# ---------------------------------------------------------------------------
+# Constraints + auto selection
+# ---------------------------------------------------------------------------
+
+def test_hypercube_rejects_non_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        hypercube_cluster_allreduce(jnp.ones((4,)), "c", 12, 3, jnp.float32(1 / 3))
+
+
+def test_collective_backend_rejects_non_power_of_two():
+    spec = ClusterSpec.uniform(12, 4)  # g = 3
+    with pytest.raises(ValueError, match="power-of-two"):
+        CollectiveBackend(spec, mixing_matrix(ring(4)), 1)
+
+
+def test_auto_selection_and_fallback():
+    spec_ok = _spec(8, 4)
+    p_ok = mixing_matrix(ring(4), spec_ok.m_tilde())
+    # CPU host, no mesh: dense (interpret-mode kernels would be slower)
+    assert select_auto_backend(spec_ok, p_ok) == "dense"
+    # a mesh whose data axis spans the client axis: collective
+    mesh = types.SimpleNamespace(axis_names=("data",), devices=np.zeros(8))
+    assert select_auto_backend(spec_ok, p_ok, mesh=mesh) == "collective"
+    # non-power-of-two clusters on the same mesh: fall back to dense
+    spec_bad = ClusterSpec.uniform(12, 4)
+    p_bad = mixing_matrix(ring(4))
+    mesh12 = types.SimpleNamespace(axis_names=("data",), devices=np.zeros(12))
+    assert select_auto_backend(spec_bad, p_bad, mesh=mesh12) == "dense"
+    assert resolve_backend("auto", spec_bad, p_bad, 1).name == "dense"
+
+
+def test_legacy_gossip_impl_degrades_gracefully():
+    """aggregation_impl='gossip' honors collective only where it is valid."""
+    base = {
+        "scheduler": "sync", "model": MnistCNN(), "num_clients": 8,
+        "num_clusters": 4, "aggregation_impl": "gossip",
+    }
+    # star topology has no ring stencil: keep the historical dense fallback
+    assert make_run({**base, "topology": "star"}).scheduler.backend.name == "dense"
+    # ring + power-of-two clusters: the collective path is now honored
+    assert (
+        make_run({**base, "topology": "ring"}).scheduler.backend.name == "collective"
+    )
+
+
+def test_resolve_backend_rejects_unknown():
+    spec = _spec(8, 4)
+    with pytest.raises(KeyError, match="unknown aggregation backend"):
+        resolve_backend("fancy", spec, mixing_matrix(ring(4), spec.m_tilde()), 1)
+
+
+def test_pallas_intra_requires_contiguous_uniform_layout():
+    spec = ClusterSpec(8, (0, 1, 0, 1, 2, 3, 2, 3), tuple([1.0] * 8))
+    b = PallasBackend(spec, mixing_matrix(ring(4), spec.m_tilde()), 1,
+                      interpret=True, tile_m=64)
+    with pytest.raises(ValueError, match="contiguous uniform"):
+        b.intra_cluster(_tree(8), jnp.asarray(spec.m_hat(), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Scenario-level: identical global models across sync / round / async runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_env():
+    data = mnist_like(400, seed=0)
+    train, _ = data.split(0.9)
+    ds = FederatedDataset(train, iid_partition(train.y, 8))
+    spec = ClusterSpec(8, (0, 0, 1, 1, 2, 2, 3, 3), ds.data_sizes())
+    return ds, spec
+
+
+BACKENDS = ["dense", "pallas", "collective"]
+
+
+def _global(runtime):
+    return [np.asarray(x) for x in jax.tree.leaves(runtime.global_params())]
+
+
+def _assert_same(ref, out, ctx):
+    for a, b in zip(ref, out):
+        np.testing.assert_allclose(b, a, atol=1e-5, err_msg=ctx)
+
+
+def test_sync_run_identical_across_backends(fed_env):
+    ds, spec = fed_env
+    rng = np.random.default_rng(1)
+    batches = [ds.stacked_batch(4, rng) for _ in range(4)]
+
+    def run(backend):
+        runtime = make_run({
+            "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
+            "topology": "ring", "tau1": 2, "tau2": 2, "alpha": 2,
+            "learning_rate": 0.05, "seed": 3, "backend": backend,
+        })
+        for _ in range(4):  # covers intra (k=2) and inter (k=4)
+            runtime.step(lambda k: batches[k - 1])
+        return _global(runtime)
+
+    ref = run("dense")
+    for backend in BACKENDS[1:]:
+        _assert_same(ref, run(backend), f"sync/{backend}")
+
+
+def test_round_run_identical_across_backends(fed_env):
+    ds, spec = fed_env
+    rng = np.random.default_rng(2)
+    batches = [ds.stacked_batch(4, rng) for _ in range(4)]
+
+    def run(backend):
+        runtime = make_run({
+            "scheduler": "round", "model": MnistCNN(), "num_clients": 8,
+            "num_clusters": 4, "tau1": 2, "tau2": 2, "alpha": 2,
+            "learning_rate": 0.05, "seed": 3, "backend": backend,
+        })
+        runtime.step(lambda k: batches[k - 1])  # one compiled round
+        return _global(runtime)
+
+    ref = run("dense")
+    for backend in BACKENDS[1:]:
+        _assert_same(ref, run(backend), f"round/{backend}")
+
+
+def test_async_run_identical_across_backends(fed_env):
+    ds, spec = fed_env
+
+    def run(backend):
+        runtime = make_run({
+            "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+            "topology": "ring", "heterogeneity": 4.0, "speed_seed": 2,
+            "learning_rate": 0.05, "min_batches": 2, "theta_max": 6,
+            "seed": 3, "backend": backend,
+        })
+        batcher = ClientBatcher(ds, 4, seed=5)
+        for _ in range(6):
+            runtime.step(batcher)
+        return _global(runtime)
+
+    ref = run("dense")
+    for backend in BACKENDS[1:]:
+        _assert_same(ref, run(backend), f"async/{backend}")

@@ -7,10 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ring, star, fully_connected, mixing_matrix
+from repro.core import ClusterSpec, ring, star, fully_connected, mixing_matrix
 from repro.kernels import (
     cluster_agg, cluster_agg_ref, cluster_agg_tree, flash_attention,
-    flash_attention_ref, gossip_mix, gossip_mix_ref, gossip_mix_tree,
+    flash_attention_ref, fused_transition, fused_transition_ref,
+    fused_transition_tree, gossip_mix, gossip_mix_ref, gossip_mix_tree,
     normalized_update, sgd_update, sgd_update_tree,
 )
 from repro.kernels.fused_sgd import normalized_update_ref, sgd_update_ref
@@ -74,6 +75,63 @@ def test_cluster_agg_dtype(dtype):
     ref = cluster_agg_ref(w, wt, 2)
     tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol)
+
+
+# -- fused_transition ----------------------------------------------------------
+
+def _factors(c, d, topo=ring):
+    spec = ClusterSpec(
+        c, tuple(i // (c // d) for i in range(c)),
+        tuple(RNG.uniform(0.5, 2.0, c)),
+    )
+    vt = jnp.asarray(spec.V().T, jnp.float32)
+    bt = jnp.asarray(spec.B().T, jnp.float32)
+    p = jnp.asarray(mixing_matrix(topo(d), spec.m_tilde()), jnp.float32)
+    return vt, p, bt
+
+
+@pytest.mark.parametrize("c,d,m,alpha", [
+    (8, 4, 512, 0),    # alpha=0: the V B (intra) event
+    (8, 4, 512, 1),
+    (16, 4, 1024, 2),
+    (20, 5, 512, 3),
+])
+def test_fused_transition_sweep(c, d, m, alpha):
+    vt, p, bt = _factors(c, d)
+    w = arr((c, m))
+    out = fused_transition(w, vt, p, bt, alpha=alpha, interpret=True, tile_m=256)
+    ref = fused_transition_ref(w, vt, p, bt, alpha)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    # the fusion must equal the dense Lemma-1 einsum against T = V P^alpha B
+    t = np.asarray(spec_t(vt, p, bt, alpha))
+    np.testing.assert_allclose(out, np.einsum("cm,cd->dm", np.asarray(w), t), atol=1e-4)
+
+
+def spec_t(vt, p, bt, alpha):
+    v, b = np.asarray(vt).T, np.asarray(bt).T
+    return v @ np.linalg.matrix_power(np.asarray(p), alpha) @ b
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_transition_dtypes(dtype):
+    vt, p, bt = _factors(8, 4)
+    w = arr((8, 512), dtype)
+    out = fused_transition(w, vt, p, bt, alpha=2, interpret=True)
+    ref = fused_transition_ref(w, vt, p, bt, 2)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol
+    )
+
+
+def test_fused_transition_tree_pads_ragged_leaves():
+    vt, p, bt = _factors(8, 4)
+    tree = {"a": arr((8, 3, 7)), "b": arr((8, 130))}
+    out = fused_transition_tree(tree, vt, p, bt, alpha=1, interpret=True, tile_m=64)
+    ref = {k: fused_transition_ref(v.reshape(8, -1), vt, p, bt, 1).reshape(v.shape)
+           for k, v in tree.items()}
+    for k in tree:
+        np.testing.assert_allclose(out[k], ref[k], atol=1e-5)
 
 
 # -- flash_attention ---------------------------------------------------------------
