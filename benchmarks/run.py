@@ -20,7 +20,7 @@ def main() -> None:
 
     from . import (
         agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
-        moe_ablation, roofline_report,
+        moe_ablation, roofline_report, straggler_wallclock,
     )
 
     registry = {
@@ -34,6 +34,7 @@ def main() -> None:
         "table1": figures.table1_latency,
         "kernels": kernels_bench.main,
         "agg_backends": agg_backends.main,
+        "straggler_wallclock": straggler_wallclock.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,
         "cifar": cifar_task.main,

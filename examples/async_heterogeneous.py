@@ -10,12 +10,16 @@ import argparse
 
 import numpy as np
 
-from repro.core import ClusterSpec, MNIST_LATENCY, make_run, make_speeds
+from repro.core import ClusterSpec, MNIST_LATENCY, make_run
 from repro.data import ClientBatcher, FederatedDataset, mnist_like, skewed_label_partition
+from repro.hetero import sample_profile
 from repro.models import MnistCNN
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--H", type=float, default=10.0, help="heterogeneity gap")
+ap.add_argument("--profile", default="uniform",
+                choices=["uniform", "bimodal-straggler", "exponential"],
+                help="device-heterogeneity fleet sampler (repro.hetero)")
 ap.add_argument("--events", type=int, default=60)
 args = ap.parse_args()
 
@@ -27,14 +31,21 @@ ds = FederatedDataset(train, parts)
 eval_batch = {"x": test.x[:512], "y": test.y[:512]}
 spec = ClusterSpec(CLIENTS, tuple(i * CLUSTERS // CLIENTS for i in range(CLIENTS)),
                    ds.data_sizes())
-speeds = make_speeds(CLIENTS, args.H, seed=1)
-print(f"device heterogeneity H = {speeds.max() / speeds.min():.1f}")
+profile_spec = {"kind": args.profile}
+if args.profile == "uniform":
+    profile_spec["heterogeneity"] = args.H
+elif args.profile == "bimodal-straggler":
+    profile_spec["speedup"] = args.H
+fleet = sample_profile(profile_spec, CLIENTS, seed=1)
+print(f"{fleet.name} fleet: H = {fleet.heterogeneity():.1f}, "
+      f"min uplink = {fleet.bandwidths.min():.2f}x")
 
-# synchronous baseline (slowest client paces every iteration)
+# synchronous baseline: with the same fleet attached, every iteration waits
+# for the slowest device (the straggler effect the async regime removes)
 sync = make_run({
     "scheduler": "sync", "model": MnistCNN(), "clusters": spec, "topology": "ring",
     "tau1": 2, "tau2": 1, "alpha": 1, "learning_rate": 0.05,
-    "latency": MNIST_LATENCY, "seed": 0,
+    "latency": MNIST_LATENCY, "profile": fleet, "seed": 0,
 })
 rng = np.random.default_rng(0)
 h_sync = sync.run(args.events, lambda k: ds.stacked_batch(10, rng), eval_batch,
@@ -43,7 +54,7 @@ h_sync = sync.run(args.events, lambda k: ds.stacked_batch(10, rng), eval_batch,
 for name, psi in (("vanilla-async", "constant"), ("staleness-aware", "staleness")):
     runtime = make_run({
         "scheduler": "async", "model": MnistCNN(), "clusters": spec,
-        "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+        "topology": "ring", "profile": fleet, "learning_rate": 0.05,
         "min_batches": 2, "theta_max": 8, "psi": psi,
         "latency": MNIST_LATENCY, "seed": 0,
     })

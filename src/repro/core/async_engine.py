@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import numpy as np
 
@@ -34,17 +34,22 @@ from .protocol import ClusterSpec
 from .staleness import psi_inverse
 from .topology import Topology
 
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (hetero -> core)
+    from ..hetero import DeviceProfile
+
 __all__ = ["AsyncConfig", "AsyncSDFEEL", "make_speeds"]
 
 
 def make_speeds(num_clients: int, heterogeneity: float, seed: int = 0) -> np.ndarray:
     """Client speeds h_i with heterogeneity gap H = max h / min h."""
     rng = np.random.default_rng(seed)
-    if heterogeneity <= 1.0:
+    if heterogeneity <= 1.0 or num_clients < 2:
         return np.ones(num_clients)
     h = rng.uniform(1.0, heterogeneity, size=num_clients)
-    h[rng.integers(num_clients)] = 1.0            # pin the slowest
-    h[rng.integers(num_clients)] = heterogeneity  # pin the fastest
+    # pin slowest/fastest at distinct indices so the gap is exactly H
+    lo, hi = rng.choice(num_clients, size=2, replace=False)
+    h[lo] = 1.0
+    h[hi] = heterogeneity
     return h
 
 
@@ -52,13 +57,28 @@ def make_speeds(num_clients: int, heterogeneity: float, seed: int = 0) -> np.nda
 class AsyncConfig:
     clusters: ClusterSpec
     topology: Topology
-    speeds: np.ndarray                  # h_i per client
+    speeds: Optional[np.ndarray] = None  # h_i per client (or take them from profile)
     learning_rate: float = 0.01
     theta_min: int = 1
     theta_max: int = 20
     min_batches: int = 4                # deadline: slowest client fits this many
     psi: Callable = psi_inverse
     alpha_latency: Optional[LatencyModel] = None
+    profile: Optional["DeviceProfile"] = None   # per-client compute/link/availability
+
+    def __post_init__(self):
+        if self.profile is not None:
+            if self.speeds is not None:
+                # iter_times() prices the queue from the profile while theta()
+                # reads speeds; two sources could silently disagree
+                raise ValueError("pass either speeds or profile, not both")
+            if self.profile.num_clients != self.clusters.num_clients:
+                raise ValueError("profile size must match the number of clients")
+            object.__setattr__(self, "speeds", self.profile.speeds)
+        elif self.speeds is None:
+            object.__setattr__(self, "speeds", np.ones(self.clusters.num_clients))
+        if len(self.speeds) != self.clusters.num_clients:
+            raise ValueError("one speed per client required")
 
     def theta(self) -> np.ndarray:
         """theta_i: local epochs within each cluster's deadline (eq. 18)."""
@@ -76,7 +96,18 @@ class AsyncConfig:
         return out
 
     def iter_times(self) -> np.ndarray:
-        """Per-cluster iteration latency T_iter^(d) (compute + comms)."""
+        """Per-cluster iteration latency T_iter^(d) (compute + comms).
+
+        With a ``DeviceProfile`` attached, each cluster is priced by its own
+        slowest member *and* its narrowest uplink (``FleetTiming``); without
+        one, only the compute leg differentiates clusters (seed behavior).
+        """
+        if self.profile is not None:
+            from ..hetero import FleetTiming
+
+            return FleetTiming(self.profile, self.alpha_latency).cluster_service_times(
+                self.clusters, self.min_batches
+            )
         lat = self.alpha_latency
         h = np.asarray(self.speeds, dtype=np.float64)
         times = np.zeros(self.clusters.num_clusters)

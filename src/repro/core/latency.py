@@ -25,12 +25,15 @@ class LatencyModel:
     rate_client_cloud: float = 2.5e6    # R^{ct-cd} = 2.5 Mbps
 
     # -- primitive latencies -------------------------------------------------
+    # ``speed_scale`` / ``bandwidth_scale`` default to 1.0 == the paper's
+    # slowest-device / nominal-link constants; a ``DeviceProfile`` threads
+    # per-client values through the same primitives (see repro.hetero).
     def t_comp(self, speed_scale: float = 1.0) -> float:
         """Per-local-iteration compute time; speed_scale=h_i/h_slowest >= 1."""
         return self.n_mac_flops / (self.cpu_flops * speed_scale)
 
-    def t_comm_client_server(self) -> float:
-        return self.model_bits / self.rate_client_server
+    def t_comm_client_server(self, bandwidth_scale: float = 1.0) -> float:
+        return self.model_bits / (self.rate_client_server * bandwidth_scale)
 
     def t_comm_server_server(self) -> float:
         return self.model_bits / self.rate_server_server
@@ -38,8 +41,8 @@ class LatencyModel:
     def t_comm_server_cloud(self) -> float:
         return self.model_bits / self.rate_server_cloud
 
-    def t_comm_client_cloud(self) -> float:
-        return self.model_bits / self.rate_client_cloud
+    def t_comm_client_cloud(self, bandwidth_scale: float = 1.0) -> float:
+        return self.model_bits / (self.rate_client_cloud * bandwidth_scale)
 
     # -- per-K totals for each FL system (Table I rows) -----------------------
     def sdfeel_total(self, k: int, tau1: int, tau2: int, alpha: int) -> float:

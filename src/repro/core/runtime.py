@@ -131,8 +131,18 @@ def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
     )
 
 
-def _event_time(latency: Optional[LatencyModel], alpha: int, event: str) -> float:
-    """Per-iteration wall-clock of Section V-B for one sync protocol event."""
+def _event_time(
+    latency: Optional[LatencyModel], alpha: int, event: str, profile=None
+) -> float:
+    """Per-iteration wall-clock of Section V-B for one sync protocol event.
+
+    With a ``DeviceProfile``, synchronous pacing is set by the slowest
+    effective client and the narrowest uplink (the straggler effect).
+    """
+    if profile is not None:
+        from ..hetero import FleetTiming
+
+        return FleetTiming(profile, latency).sync_event_time(event, alpha)
     if latency is None:
         return 0.0
     t = latency.t_comp()
@@ -195,9 +205,10 @@ class SyncScheduler:
     name = "sync"
 
     def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
-                 backend=None):
+                 backend=None, profile=None):
         self.cfg = cfg
         self.latency = latency
+        self.profile = profile
         self.params: PyTree = None
         self._backend_spec = backend
 
@@ -233,7 +244,7 @@ class SyncScheduler:
         return event
 
     def iteration_time(self, event: str) -> float:
-        return _event_time(self.latency, self.cfg.alpha, event)
+        return _event_time(self.latency, self.cfg.alpha, event, self.profile)
 
     def step(self, k: int, batch_source) -> StepEvent:
         event = self.advance(k, batch_source(k))
@@ -259,10 +270,11 @@ class RoundScheduler:
     name = "round"
 
     def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
-                 backend=None):
+                 backend=None, profile=None):
         self.fl = fl
         self.optimizer = optimizer
         self.latency = latency
+        self.profile = profile
         self.params: PyTree = None
         self.opt_state: PyTree = None
         self._backend_spec = backend
@@ -301,7 +313,8 @@ class RoundScheduler:
     def round_time(self) -> float:
         """Section V-B wall-clock of one full round."""
         return sum(
-            _event_time(self.latency, self.fl.alpha, self._proto.event_at(i))
+            _event_time(self.latency, self.fl.alpha, self._proto.event_at(i),
+                        self.profile)
             for i in range(1, self.iterations_per_round + 1)
         )
 
@@ -351,6 +364,13 @@ class AsyncScheduler:
         self.model = model
         self.theta = cfg.theta()
         self.iter_times = cfg.iter_times()
+        self._dropout = None
+        if cfg.profile is not None and np.any(cfg.profile.availability < 1.0):
+            from ..hetero import FleetTiming
+
+            self._dropout = FleetTiming(cfg.profile, cfg.alpha_latency).dropout_process(
+                cfg.clusters, seed=seed
+            )
         d = cfg.clusters.num_clusters
         # per-cluster models, stacked (D, ...)
         self.y = stacked_init(model, d, seed)
@@ -435,7 +455,12 @@ class AsyncScheduler:
 
         self.t += 1
         self.last_update[d] = self.t
-        heapq.heappush(self._queue, (self.clock + self.iter_times[d], d))
+        # Next firing: service time, stretched by dropout retries when the
+        # profile says some of the cluster's devices are flaky.
+        service = self.iter_times[d]
+        if self._dropout is not None:
+            service *= self._dropout.attempts(d)
+        heapq.heappush(self._queue, (self.clock + service, d))
         return StepEvent(
             kind="cluster", iteration=self.t, dt=self.clock - prev_clock, cluster=d
         )
@@ -549,6 +574,22 @@ def _as_clusters(s: dict):
     return ClusterSpec.uniform(s.pop("num_clients"), s.pop("num_clusters"))
 
 
+def _as_profile(s: dict, num_clients: int):
+    """Resolve the scenario's ``"profile"`` key into a DeviceProfile (or None).
+
+    Accepts a registered sampler name ("bimodal-straggler", ...), a
+    ``{"kind": ..., **params}`` dict, or a ready ``DeviceProfile``;
+    ``"profile_seed"`` seeds the sampler.
+    """
+    spec = s.pop("profile", None)
+    seed = s.pop("profile_seed", 0)
+    if spec is None:
+        return None
+    from ..hetero import sample_profile
+
+    return sample_profile(spec, num_clients, seed=seed)
+
+
 @register_scheduler("sync")
 def _make_sync(s: dict) -> SyncScheduler:
     clusters = _as_clusters(s)
@@ -563,7 +604,8 @@ def _make_sync(s: dict) -> SyncScheduler:
         aggregation_impl=s.pop("aggregation_impl", "dense"),
     )
     return SyncScheduler(
-        cfg, latency=s.pop("latency", None), backend=s.pop("backend", None)
+        cfg, latency=s.pop("latency", None), backend=s.pop("backend", None),
+        profile=_as_profile(s, clusters.num_clients),
     )
 
 
@@ -585,19 +627,20 @@ def _make_round(s: dict) -> RoundScheduler:
         )
     return RoundScheduler(
         fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None),
-        backend=s.pop("backend", None),
+        backend=s.pop("backend", None), profile=_as_profile(s, fl.num_clients),
     )
 
 
 @register_scheduler("async")
 def _make_async(s: dict) -> AsyncScheduler:
     from .async_engine import AsyncConfig, make_speeds
-    from .staleness import psi_constant, psi_inverse
+    from .staleness import psi_constant, psi_exponential, psi_inverse
 
     clusters = _as_clusters(s)
     topology = _as_topology(s.pop("topology", "ring"), clusters.num_clusters)
+    profile = _as_profile(s, clusters.num_clients)
     speeds = s.pop("speeds", None)
-    if speeds is None:
+    if speeds is None and profile is None:
         speeds = make_speeds(
             clusters.num_clients,
             s.pop("heterogeneity", 1.0),
@@ -605,29 +648,46 @@ def _make_async(s: dict) -> AsyncScheduler:
         )
     psi = s.pop("psi", psi_inverse)
     if isinstance(psi, str):
-        psi = {"staleness": psi_inverse, "constant": psi_constant}[psi]
+        psi = {
+            "staleness": psi_inverse,
+            "constant": psi_constant,
+            "exponential": psi_exponential(),
+        }[psi]
     cfg = AsyncConfig(
         clusters=clusters,
         topology=topology,
-        speeds=np.asarray(speeds),
+        speeds=None if speeds is None else np.asarray(speeds),
         learning_rate=s.pop("learning_rate", 0.01),
         theta_min=s.pop("theta_min", 1),
         theta_max=s.pop("theta_max", 20),
         min_batches=s.pop("min_batches", 4),
         psi=psi,
         alpha_latency=s.pop("latency", None),
+        profile=profile,
     )
     return AsyncScheduler(cfg, backend=s.pop("backend", None))
 
 
-def make_run(scenario: dict) -> FederationRuntime:
+def make_run(scenario) -> FederationRuntime:
     """Build a ``FederationRuntime`` from a flat scenario config dict.
 
     Required keys: ``model`` plus whatever the chosen ``scheduler`` factory
     needs (see the registered factories above).  Common keys: ``scheduler``
     (default "sync"), ``seed``.  Unconsumed keys raise, so typos fail fast.
+
+    Named scenarios from ``repro.scenarios`` resolve here too: pass the name
+    directly (``make_run("straggler-bimodal-async")``) or a dict with a
+    ``"scenario"`` key whose remaining entries override the registered
+    config (e.g. ``{"scenario": "mnist-noniid-ring", "num_clients": 8}``).
     """
+    if isinstance(scenario, str):
+        scenario = {"scenario": scenario}
     s = dict(scenario)
+    named = s.pop("scenario", None)
+    if named is not None:
+        from ..scenarios import get_scenario
+
+        s = get_scenario(named).config(**s)
     name = s.pop("scheduler", "sync")
     if name not in SCHEDULER_REGISTRY:
         raise KeyError(

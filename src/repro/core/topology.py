@@ -149,12 +149,23 @@ def from_edges(d: int, edges: Sequence[tuple[int, int]], name: str = "custom") -
     return Topology(name, d, a)
 
 
+def torus(d: int) -> Topology:
+    """Near-square 2-D torus over ``d`` servers (name-addressable torus_2d)."""
+    rows = int(np.floor(np.sqrt(d)))
+    while rows > 1 and d % rows:
+        rows -= 1
+    if rows <= 1:
+        raise ValueError(f"torus requires a composite server count, got {d}")
+    return torus_2d(rows, d // rows)
+
+
 TOPOLOGIES = {
     "ring": ring,
     "star": star,
     "fully_connected": fully_connected,
     "chain": chain,
     "partially_connected": partially_connected,
+    "torus": torus,
 }
 
 

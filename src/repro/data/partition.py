@@ -38,15 +38,22 @@ def skewed_label_partition(
         cls = rng.choice(num_classes, size=classes_per_client, replace=False)
         choices.append(cls)
         demand[cls] += 1
+    # Split every chosen class fully among its takers: the first
+    # ``len % demand`` takers receive one extra sample, so no per-class tail
+    # is dropped.  (Classes no client chose remain unassigned by design —
+    # callers can detect them via ``demand == 0``.)
     cursors = np.zeros(num_classes, dtype=np.int64)
+    served = np.zeros(num_classes, dtype=np.int64)
     out = []
     for cls in choices:
         take = []
         for c in cls:
-            per = len(by_class[c]) // max(demand[c], 1)
+            per, rem = divmod(len(by_class[c]), demand[c])
+            size = per + (1 if served[c] < rem else 0)
             lo = cursors[c]
-            take.append(by_class[c][lo : lo + per])
-            cursors[c] += per
+            take.append(by_class[c][lo : lo + size])
+            cursors[c] += size
+            served[c] += 1
         out.append(np.sort(np.concatenate(take)))
     return out
 
@@ -57,11 +64,22 @@ def dirichlet_partition(
     beta: float = 0.5,
     seed: int = 0,
     min_samples: int = 2,
+    max_retries: int = 1000,
 ) -> list[np.ndarray]:
-    """Dir(beta) label-proportion sampling (Yurochkin et al. / paper §V-A)."""
+    """Dir(beta) label-proportion sampling (Yurochkin et al. / paper §V-A).
+
+    Resamples until every client holds at least ``min_samples`` indices;
+    raises ``ValueError`` after ``max_retries`` attempts (or immediately when
+    the demand is infeasible) instead of spinning forever.
+    """
+    if min_samples * num_clients > len(labels):
+        raise ValueError(
+            f"min_samples={min_samples} x {num_clients} clients exceeds "
+            f"{len(labels)} samples: partition is infeasible"
+        )
     rng = np.random.default_rng(seed)
     num_classes = int(labels.max()) + 1
-    while True:
+    for _ in range(max_retries):
         buckets: list[list[np.ndarray]] = [[] for _ in range(num_clients)]
         for c in range(num_classes):
             idx = np.nonzero(labels == c)[0]
@@ -73,6 +91,11 @@ def dirichlet_partition(
         parts = [np.sort(np.concatenate(b)) for b in buckets]
         if min(len(p) for p in parts) >= min_samples:
             return parts
+    raise ValueError(
+        f"dirichlet_partition failed to satisfy min_samples={min_samples} for "
+        f"{num_clients} clients within {max_retries} retries (beta={beta}); "
+        "lower min_samples or raise beta"
+    )
 
 
 def partition_stats(labels: np.ndarray, parts: list[np.ndarray]) -> dict:

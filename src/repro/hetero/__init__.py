@@ -1,0 +1,17 @@
+"""Device-heterogeneity subsystem: profiles, samplers, and fleet timing."""
+from .profiles import (
+    DeviceProfile,
+    PROFILE_REGISTRY,
+    register_profile,
+    sample_profile,
+)
+from .timing import ClusterDropout, FleetTiming
+
+__all__ = [
+    "DeviceProfile",
+    "PROFILE_REGISTRY",
+    "register_profile",
+    "sample_profile",
+    "ClusterDropout",
+    "FleetTiming",
+]

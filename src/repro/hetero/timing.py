@@ -1,0 +1,129 @@
+"""Fleet-aware wall-clock pricing: DeviceProfile x LatencyModel -> times.
+
+The seed repo priced every iteration with §V-B *global* constants (one CPU
+rate, one uplink rate).  With a :class:`DeviceProfile` the same primitives
+become per-client:
+
+* synchronous regimes are paced by the *slowest effective* client — the
+  straggler effect the async algorithm exists to fix;
+* the async event queue gets *per-cluster* service times (each cluster's
+  deadline is set by its own slowest member and narrowest uplink), which is
+  what makes the eq. 21-22 iteration gaps non-degenerate;
+* an optional dropout process draws geometric retry counts from the
+  availability vector, so flaky devices stretch their cluster's gaps.
+
+All times remain the §V-B units (seconds) so accuracy-vs-time histories are
+comparable across sync / round / async under one profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.latency import LatencyModel
+from ..core.protocol import ClusterSpec
+from .profiles import DeviceProfile
+
+__all__ = ["FleetTiming", "ClusterDropout"]
+
+# Bound on dropout retries per event: keeps Lemma-4 iteration gaps finite
+# even under availability -> 0 (a device that never answers is eventually
+# skipped by the edge server, not waited on forever).
+MAX_ATTEMPTS = 10
+
+
+class ClusterDropout:
+    """Geometric retry process driven by per-cluster availability.
+
+    When cluster ``d`` schedules its next iteration, the number of attempts
+    until every required device is up is geometric in the cluster's
+    availability; each failed attempt costs one full service time.  Draws
+    are deterministic given ``seed``.
+    """
+
+    def __init__(self, availability: np.ndarray, seed: int = 0):
+        avail = np.asarray(availability, dtype=np.float64)
+        if np.any(avail <= 0) or np.any(avail > 1):
+            raise ValueError("availability must lie in (0, 1]")
+        self.availability = avail
+        self._rng = np.random.default_rng(seed)
+
+    def attempts(self, d: int) -> int:
+        """Total attempts (>= 1) for cluster ``d``'s next iteration."""
+        a = self.availability[d]
+        if a >= 1.0:
+            return 1
+        return int(min(self._rng.geometric(a), MAX_ATTEMPTS))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTiming:
+    """Prices protocol events for one fleet under one latency model."""
+
+    profile: DeviceProfile
+    latency: Optional[LatencyModel] = None
+
+    # -- synchronous pacing --------------------------------------------------
+    def sync_event_time(self, event: str, alpha: int = 1) -> float:
+        """Per-iteration wall-clock of a synchronous step under this fleet.
+
+        Local compute waits for the slowest *effective* client (speed
+        discounted by availability: a device that answers half the time
+        halves its useful speed in expectation); uploads at aggregation
+        events wait for the narrowest uplink.
+        """
+        if self.latency is None:
+            return 0.0
+        eff = self.profile.effective_speeds()
+        t = self.latency.t_comp(float(eff.min()))
+        if event in ("intra", "inter"):
+            t += self.latency.t_comm_client_server(
+                float(self.profile.bandwidths.min())
+            )
+        if event == "inter":
+            t += alpha * self.latency.t_comm_server_server()
+        return t
+
+    # -- asynchronous per-cluster service times ------------------------------
+    def cluster_service_times(
+        self, clusters: ClusterSpec, min_batches: int
+    ) -> np.ndarray:
+        """T_iter^(d): each cluster paced by its own slowest member + uplink.
+
+        Matches ``AsyncConfig.iter_times`` for the homogeneous fleet
+        (including its latency-free fallback units) and generalizes it with
+        per-client bandwidths.  Availability is *not* folded in here — the
+        dropout process charges retries explicitly so gaps stay stochastic.
+        """
+        h = self.profile.speeds
+        bw = self.profile.bandwidths
+        times = np.zeros(clusters.num_clusters)
+        for d in range(clusters.num_clusters):
+            idx = clusters.clients_of(d)
+            slowest = float(h[idx].min())
+            bw_min = float(bw[idx].min())
+            if self.latency is None:
+                comp = min_batches / slowest
+                comm = 0.5 / bw_min
+            else:
+                comp = min_batches * self.latency.t_comp(slowest)
+                comm = (
+                    self.latency.t_comm_client_server(bw_min)
+                    + self.latency.t_comm_server_server()
+                )
+            times[d] = comp + comm
+        return times
+
+    def cluster_availability(self, clusters: ClusterSpec) -> np.ndarray:
+        """Per-cluster availability: the flakiest member gates the deadline."""
+        return np.array(
+            [
+                float(self.profile.availability[clusters.clients_of(d)].min())
+                for d in range(clusters.num_clusters)
+            ]
+        )
+
+    def dropout_process(self, clusters: ClusterSpec, seed: int = 0) -> ClusterDropout:
+        return ClusterDropout(self.cluster_availability(clusters), seed=seed)

@@ -28,23 +28,60 @@ from repro.data.synthetic import SyntheticLM
 from repro.models import CausalLM
 
 
+def run_scenario(args) -> None:
+    """Drive a named scenario from ``repro.scenarios`` (paper-task models)."""
+    from repro.scenarios import build_scenario, get_scenario, list_scenarios
+
+    if args.scenario == "list":
+        for sc in list_scenarios():
+            print(f"{sc.name:28s} [{sc.scheduler:5s}] {sc.description}")
+        return
+    sc = get_scenario(args.scenario)
+    overrides = {"seed": args.seed, "backend": args.backend}
+    # every explicitly-set flag overrides the registered config (None = unset)
+    for flag, key in (("clients", "num_clients"), ("clusters", "num_clusters"),
+                      ("samples", "num_samples"), ("tau1", "tau1"),
+                      ("tau2", "tau2"), ("alpha", "alpha"),
+                      ("lr", "learning_rate"), ("batch", "batch_size")):
+        value = getattr(args, flag)
+        if value is not None:
+            overrides[key] = value
+    run = sc.build(**overrides)
+    prof = getattr(run.runtime.scheduler, "profile", None) or getattr(
+        getattr(run.runtime.scheduler, "cfg", None), "profile", None
+    )
+    hline = f" H={prof.heterogeneity():.1f}" if prof is not None else ""
+    print(f"scenario={sc.name} scheduler={sc.scheduler} topology={sc.topology} "
+          f"partition={sc.partition}{hline}")
+    t0 = time.time()
+    hist = run.run(args.steps, eval_every=max(1, args.steps // 4))
+    acc = f" acc={hist.accuracy[-1]:.3f}" if hist.accuracy else ""
+    print(f"done: steps={args.steps} loss={hist.loss[-1]:.4f}{acc} "
+          f"simulated_wallclock={hist.wallclock[-1]:.1f}s ({time.time() - t0:.1f}s real)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--scenario", default=None,
+                    help="named scenario from repro.scenarios ('list' to enumerate); "
+                         "overrides the LM path")
+    ap.add_argument("--samples", type=int, default=None,
+                    help="dataset size for --scenario runs")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=50,
                     help="protocol iterations (rounded up to whole rounds)")
-    ap.add_argument("--clients", type=int, default=8)
-    ap.add_argument("--clusters", type=int, default=4)
-    ap.add_argument("--tau1", type=int, default=2)
-    ap.add_argument("--tau2", type=int, default=1)
-    ap.add_argument("--alpha", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--clients", type=int, default=None, help="default 8 (LM path)")
+    ap.add_argument("--clusters", type=int, default=None, help="default 4 (LM path)")
+    ap.add_argument("--tau1", type=int, default=None, help="default 2 (LM path)")
+    ap.add_argument("--tau2", type=int, default=None, help="default 1 (LM path)")
+    ap.add_argument("--alpha", type=int, default=None, help="default 2 (LM path)")
+    ap.add_argument("--lr", type=float, default=None, help="default 0.05 (LM path)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "dense", "pallas", "collective"],
                     help="aggregation backend for the Lemma-1 transition")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None, help="default 4 (LM path)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -52,6 +89,13 @@ def main(argv=None):
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.scenario is not None:
+        return run_scenario(args)
+    for flag, default in (("clients", 8), ("clusters", 4), ("tau1", 2),
+                          ("tau2", 1), ("alpha", 2), ("lr", 0.05), ("batch", 4)):
+        if getattr(args, flag) is None:
+            setattr(args, flag, default)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,0 +1,305 @@
+"""Named scenario registry: one string == one full experimental setup.
+
+The paper's experiment grid is a cross-product of data heterogeneity
+(partitioner), edge topology, training regime (scheduler), aggregation
+backend, and device heterogeneity (fleet profile).  A :class:`Scenario`
+pins one point of that grid under a memorable name, so
+
+    runtime = make_run("straggler-bimodal-async")
+
+resolves to the same configuration everywhere — launch CLI
+(``python -m repro.launch.train --scenario ...``), benchmarks
+(``benchmarks/straggler_wallclock.py``), tests, and notebooks.  Overrides
+ride along: ``make_run({"scenario": name, "num_clients": 8})``.
+
+``build_scenario`` additionally materializes the data environment (dataset,
+partition, eval batch) and hands back a ready-to-run bundle, since a
+runtime without batches is only half an experiment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+__all__ = [
+    "Scenario",
+    "ScenarioRun",
+    "SCENARIOS",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "build_scenario",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named point of the experiment grid (immutable template).
+
+    ``config()`` expands it into the flat ``make_run`` dict; ``build()``
+    also materializes the data environment.  Every field can be overridden
+    at resolution time.
+    """
+
+    name: str
+    description: str
+    scheduler: str                      # "sync" | "round" | "async"
+    dataset: str = "mnist"              # "mnist" | "cifar"
+    partition: str = "label_skew"       # "iid" | "label_skew" | "dirichlet"
+    partition_params: Optional[dict] = None
+    topology: str = "ring"
+    backend: str = "auto"
+    profile: Union[str, dict, None] = None   # repro.hetero sampler spec
+    num_clients: int = 20
+    num_clusters: int = 4
+    tau1: int = 5
+    tau2: int = 1
+    alpha: int = 1
+    learning_rate: float = 0.05
+    psi: str = "staleness"              # async only
+    min_batches: int = 2                # async only
+    theta_max: int = 8                  # async only
+    batch_size: int = 10
+    num_samples: int = 2400
+
+    # -- building blocks -----------------------------------------------------
+    def _model(self):
+        from repro.models import CifarCNN, MnistCNN
+
+        return {"mnist": MnistCNN, "cifar": CifarCNN}[self.dataset]()
+
+    def _latency(self):
+        from repro.core import CIFAR_LATENCY, MNIST_LATENCY
+
+        return {"mnist": MNIST_LATENCY, "cifar": CIFAR_LATENCY}[self.dataset]
+
+    def _partition(self, labels: np.ndarray, num_clients: int, seed: int):
+        from repro.data import dirichlet_partition, iid_partition, skewed_label_partition
+
+        params = dict(self.partition_params or {})
+        if self.partition == "iid":
+            return iid_partition(labels, num_clients, seed=seed)
+        if self.partition == "dirichlet":
+            return dirichlet_partition(labels, num_clients, seed=seed, **params)
+        if self.partition == "label_skew":
+            return skewed_label_partition(labels, num_clients, seed=seed, **params)
+        raise KeyError(f"unknown partition {self.partition!r}")
+
+    def _env(self, num_clients: int, num_samples: int, seed: int):
+        from repro.data import FederatedDataset, cifar_like, mnist_like
+
+        data = {"mnist": mnist_like, "cifar": cifar_like}[self.dataset](
+            num_samples, seed=seed
+        )
+        train, test = data.split(0.85)
+        parts = self._partition(train.y, num_clients, seed)
+        ds = FederatedDataset(train, parts)
+        eval_batch = {"x": test.x[:512], "y": test.y[:512]}
+        return ds, eval_batch
+
+    # -- resolution ----------------------------------------------------------
+    def config(self, **overrides) -> dict:
+        """Flat ``make_run`` scenario dict, with ``overrides`` applied.
+
+        Environment-shaping overrides (``num_clients``, ``num_clusters``,
+        ``num_samples``, ``model``) are consumed here; everything else lands
+        in the returned dict verbatim (typos still fail fast in ``make_run``).
+
+        Note: the ``ClusterSpec`` data weights come from materializing the
+        scenario's dataset + partition, which is deterministic in
+        (``dataset``, ``num_samples``, ``seed``) — a caller who builds the
+        same environment (or just uses ``build()``, which shares one
+        materialization) gets batches that exactly match these weights.
+        """
+        cfg, _, _ = self._resolve(overrides)
+        return cfg
+
+    def _resolve(self, overrides: dict):
+        from repro.core import ClusterSpec
+
+        overrides = dict(overrides)
+        seed = overrides.pop("seed", 0)
+        c = int(overrides.pop("num_clients", self.num_clients))
+        d = int(overrides.pop("num_clusters", self.num_clusters))
+        n = int(overrides.pop("num_samples", self.num_samples))
+        model = overrides.pop("model", None) or self._model()
+        if c % d:
+            raise ValueError(f"{self.name}: {c} clients do not divide into {d} clusters")
+        ds, eval_batch = self._env(c, n, seed)
+        cfg: dict = {
+            "scheduler": self.scheduler,
+            "model": model,
+            "topology": self.topology,
+            "backend": self.backend,
+            "learning_rate": self.learning_rate,
+            "latency": self._latency(),
+            "seed": seed,
+        }
+        if self.scheduler == "round":
+            # the compiled round engine lays clients out uniformly itself
+            cfg.update(num_clients=c, num_clusters=d,
+                       tau1=self.tau1, tau2=self.tau2, alpha=self.alpha)
+        else:
+            assign = tuple(i * d // c for i in range(c))
+            cfg["clusters"] = ClusterSpec(c, assign, ds.data_sizes())
+        if self.scheduler == "sync":
+            cfg.update(tau1=self.tau1, tau2=self.tau2, alpha=self.alpha)
+        if self.scheduler == "async":
+            cfg.update(psi=self.psi, min_batches=self.min_batches,
+                       theta_max=self.theta_max)
+        if self.profile is not None:
+            cfg["profile"] = self.profile
+        cfg.update(overrides)
+        # the fleet sampler follows the run seed whether the profile came
+        # from the template or an override (unless explicitly pinned)
+        if cfg.get("profile") is not None:
+            cfg.setdefault("profile_seed", seed)
+        return cfg, ds, eval_batch
+
+    def build(self, **overrides) -> "ScenarioRun":
+        """Materialize runtime + data environment, ready to ``.run(steps)``."""
+        from repro.core import make_run
+
+        batch_size = int(overrides.pop("batch_size", self.batch_size))
+        cfg, ds, eval_batch = self._resolve(overrides)
+        seed = cfg["seed"]
+        runtime = make_run(cfg)
+        return ScenarioRun(self, runtime, ds, eval_batch, batch_size, seed)
+
+
+@dataclasses.dataclass
+class ScenarioRun:
+    """A resolved scenario: runtime + data, with the right batch source."""
+
+    scenario: Scenario
+    runtime: "object"
+    dataset: "object"
+    eval_batch: dict
+    batch_size: int
+    seed: int
+
+    def batch_source(self):
+        """The batch source matching the scheduler's contract."""
+        from repro.data import ClientBatcher
+
+        if self.scenario.scheduler == "async":
+            return ClientBatcher(self.dataset, self.batch_size, seed=self.seed)
+        rng = np.random.default_rng(self.seed)
+        return lambda k: self.dataset.stacked_batch(self.batch_size, rng)
+
+    def run(self, num_steps: int, eval_every: Optional[int] = None):
+        eval_every = eval_every or max(1, num_steps // 4)
+        return self.runtime.run(
+            num_steps, self.batch_source(), self.eval_batch, eval_every=eval_every
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario) -> Scenario:
+    if sc.name in SCENARIOS:
+        raise ValueError(f"scenario {sc.name!r} already registered")
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}"
+        )
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> list[Scenario]:
+    return [SCENARIOS[k] for k in sorted(SCENARIOS)]
+
+
+def build_scenario(name: str, **overrides) -> ScenarioRun:
+    return get_scenario(name).build(**overrides)
+
+
+# ---------------------------------------------------------------------------
+# The named grid (paper §V + the async companion papers)
+# ---------------------------------------------------------------------------
+
+register_scenario(Scenario(
+    name="mnist-iid-ring",
+    description="Sanity baseline: IID MNIST-like data, ring of 4 edge servers.",
+    scheduler="sync", partition="iid",
+))
+
+register_scenario(Scenario(
+    name="mnist-noniid-ring",
+    description="Paper §V-A MNIST setting: 2-class label skew, ring topology.",
+    scheduler="sync", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+))
+
+register_scenario(Scenario(
+    name="mnist-noniid-star",
+    description="Label-skew MNIST on a star hub (Fig. 8 topology ablation).",
+    scheduler="sync", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+    topology="star", alpha=2,
+))
+
+register_scenario(Scenario(
+    name="cifar-dirichlet-torus",
+    description="CIFAR-like task, Dir(0.5) partition, 2x2 torus of edge servers.",
+    scheduler="sync", dataset="cifar", partition="dirichlet",
+    partition_params={"beta": 0.5},
+    topology="torus", learning_rate=0.02,
+))
+
+register_scenario(Scenario(
+    name="round-compiled-ring",
+    description="Whole-round scan-compiled SPMD path on IID data (uniform clusters).",
+    scheduler="round", partition="iid", tau1=2, tau2=2, alpha=2,
+    num_clients=8,
+))
+
+register_scenario(Scenario(
+    name="straggler-bimodal-async",
+    description="Staleness-aware async SD-FEEL under a bimodal straggler fleet "
+                "(Fig. 8-10 regime).",
+    scheduler="async", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+    profile={"kind": "bimodal-straggler", "straggler_frac": 0.25, "speedup": 10.0},
+    psi="staleness",
+))
+
+register_scenario(Scenario(
+    name="straggler-bimodal-vanilla",
+    description="Same straggler fleet with staleness-oblivious constant mixing "
+                "(the vanilla-async baseline of Fig. 10a).",
+    scheduler="async", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+    profile={"kind": "bimodal-straggler", "straggler_frac": 0.25, "speedup": 10.0},
+    psi="constant",
+))
+
+register_scenario(Scenario(
+    name="dropout-heavy",
+    description="Flaky fleet: uniform speeds, 60% device availability; dropout "
+                "retries stretch the async iteration gaps.",
+    scheduler="async", partition="iid",
+    profile={"kind": "uniform", "heterogeneity": 4.0, "availability": 0.6},
+    psi="staleness",
+))
+
+register_scenario(Scenario(
+    name="exponential-hetero-async",
+    description="Heavy-tailed exponential speed distribution (a few very fast "
+                "devices), staleness-aware async.",
+    scheduler="async", partition="iid",
+    profile={"kind": "exponential", "scale": 2.0},
+    psi="staleness",
+))

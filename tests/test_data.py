@@ -1,5 +1,6 @@
 """Federated data pipeline tests."""
 import numpy as np
+import pytest
 
 from repro.data import (
     SyntheticClassification, mnist_like, cifar_like, iid_partition,
@@ -30,6 +31,66 @@ def test_skewed_label_classes_per_client():
     for p in parts:
         assert len(np.unique(d.y[p])) <= 2
         assert len(p) > 0
+
+
+def test_skewed_label_full_coverage_of_chosen_classes():
+    """No per-class remainder is dropped: every sample of every class some
+    client chose is assigned (flooring used to strand a tail per class)."""
+    for n, clients, cpc, seed in ((1000, 7, 2, 0), (997, 9, 3, 11), (500, 4, 1, 5)):
+        d = mnist_like(n, seed=seed)
+        parts = skewed_label_partition(d.y, clients, classes_per_client=cpc, seed=seed)
+        all_idx = np.concatenate(parts)
+        assert len(np.unique(all_idx)) == len(all_idx)          # disjoint
+        chosen = np.unique(d.y[all_idx])
+        expected = np.nonzero(np.isin(d.y, chosen))[0]
+        np.testing.assert_array_equal(np.sort(all_idx), expected)
+
+
+def test_skewed_label_complete_when_all_classes_chosen():
+    """With enough clients every class is drawn, so coverage is total."""
+    d = mnist_like(2000, seed=1)
+    parts = skewed_label_partition(d.y, 30, classes_per_client=2, seed=1)
+    covered = np.sort(np.concatenate(parts))
+    if len(np.unique(d.y[covered])) == int(d.y.max()) + 1:
+        np.testing.assert_array_equal(covered, np.arange(len(d.y)))
+
+
+@pytest.mark.parametrize("partition", [
+    lambda y, seed: iid_partition(y, 8, seed=seed),
+    lambda y, seed: skewed_label_partition(y, 8, classes_per_client=2, seed=seed),
+    lambda y, seed: dirichlet_partition(y, 8, beta=0.5, seed=seed),
+])
+def test_partitioners_disjoint_and_seed_deterministic(partition):
+    d = mnist_like(900, seed=2)
+    a, b, c = partition(d.y, 7), partition(d.y, 7), partition(d.y, 8)
+    for p in a:
+        assert len(np.unique(p)) == len(p)
+    idx = np.concatenate(a)
+    assert len(np.unique(idx)) == len(idx)                      # disjoint
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)                   # same seed
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c))  # seed matters
+
+
+def test_iid_partition_complete():
+    d = mnist_like(501, seed=3)
+    parts = iid_partition(d.y, 7, seed=3)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(parts)), np.arange(len(d.y))
+    )
+
+
+def test_dirichlet_infeasible_min_samples_raises():
+    d = mnist_like(100, seed=4)
+    with pytest.raises(ValueError, match="infeasible"):
+        dirichlet_partition(d.y, 10, beta=0.5, min_samples=11)
+
+
+def test_dirichlet_retry_guard_terminates():
+    """An effectively-unsatisfiable balance demand raises instead of spinning."""
+    d = mnist_like(100, seed=5)
+    with pytest.raises(ValueError, match="retries"):
+        dirichlet_partition(d.y, 10, beta=0.01, min_samples=10, max_retries=5)
 
 
 def test_dirichlet_beta_controls_noniidness():

@@ -1,0 +1,120 @@
+"""Golden-value tests for the §V-B latency model (paper Table I constants).
+
+These pin the exact per-iteration and per-K totals implied by the paper's
+constants (C_CPU = 10 GFLOPS, M_bit = 32 Mbit, R^{ct-sr} = 5 Mbps,
+R^{sr-sr} = 50 Mbps, R^{ct-cd} = 2.5 Mbps; MNIST 487.54 kFLOPs/iter,
+CIFAR 138.4 MFLOPs/iter) so latency refactors cannot silently reprice the
+Fig. 4-6 wall-clock curves.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CIFAR_LATENCY, MNIST_LATENCY
+from repro.core.latency import LatencyModel
+
+
+def test_mnist_primitives_golden():
+    lat = MNIST_LATENCY
+    assert lat.t_comp() == pytest.approx(4.8754e-5, rel=1e-12)
+    assert lat.t_comm_client_server() == pytest.approx(6.4, rel=1e-12)
+    assert lat.t_comm_server_server() == pytest.approx(0.64, rel=1e-12)
+    assert lat.t_comm_server_cloud() == pytest.approx(6.4, rel=1e-12)
+    assert lat.t_comm_client_cloud() == pytest.approx(12.8, rel=1e-12)
+
+
+def test_cifar_primitives_golden():
+    assert CIFAR_LATENCY.t_comp() == pytest.approx(0.01384, rel=1e-12)
+    # comm legs share the MNIST constants (same model bits and rates)
+    assert CIFAR_LATENCY.t_comm_client_server() == pytest.approx(6.4, rel=1e-12)
+
+
+@pytest.mark.parametrize(
+    "system,expected_mnist,expected_cifar",
+    [
+        ("sdfeel", 134.4048754, 135.784),
+        ("hierfavg", 192.0048754, 193.384),
+        ("fedavg", 256.0048754, 257.384),
+        ("feel", 128.0048754, 129.384),
+    ],
+)
+def test_table1_totals_golden(system, expected_mnist, expected_cifar):
+    """Per-100-iteration totals at tau1=5, tau2=2, alpha=1 (Table I rows)."""
+    k, tau1, tau2 = 100, 5, 2
+    for lat, expected in ((MNIST_LATENCY, expected_mnist),
+                          (CIFAR_LATENCY, expected_cifar)):
+        total = {
+            "sdfeel": lambda: lat.sdfeel_total(k, tau1, tau2, alpha=1),
+            "hierfavg": lambda: lat.hierfavg_total(k, tau1, tau2),
+            "fedavg": lambda: lat.fedavg_total(k, tau1),
+            "feel": lambda: lat.feel_total(k, tau1),
+        }[system]()
+        assert total == pytest.approx(expected, rel=1e-12)
+
+
+def test_system_ordering_matches_paper():
+    """§V-B: SD-FEEL beats HierFAVG beats FedAvg per iteration budget."""
+    for lat in (MNIST_LATENCY, CIFAR_LATENCY):
+        k, tau1, tau2 = 100, 5, 2
+        assert (lat.sdfeel_total(k, tau1, tau2, 1)
+                < lat.hierfavg_total(k, tau1, tau2)
+                < lat.fedavg_total(k, tau1))
+
+
+def test_speed_and_bandwidth_scales():
+    """Per-client scales divide the reference times (DeviceProfile hooks)."""
+    lat = MNIST_LATENCY
+    assert lat.t_comp(2.0) == pytest.approx(lat.t_comp() / 2.0, rel=1e-12)
+    assert lat.t_comm_client_server(0.5) == pytest.approx(12.8, rel=1e-12)
+    assert lat.t_comm_client_cloud(2.0) == pytest.approx(6.4, rel=1e-12)
+    # scale 1.0 is exactly the paper constant (default-arg regression guard)
+    assert lat.t_comm_client_server(1.0) == lat.t_comm_client_server()
+
+
+def test_alpha_and_rate_sensitivity():
+    """Gossip rounds and the inter-server rate move only the sr-sr term."""
+    base = MNIST_LATENCY.sdfeel_total(100, 5, 2, alpha=1)
+    assert MNIST_LATENCY.sdfeel_total(100, 5, 2, alpha=3) == pytest.approx(
+        base + 2 * 100 * 0.64 / 10, rel=1e-12
+    )
+    fast = LatencyModel(n_mac_flops=487.54e3, rate_server_server=200e6)
+    assert fast.sdfeel_total(100, 5, 2, 1) == pytest.approx(
+        base - 100 * (0.64 - 0.16) / 10, rel=1e-12
+    )
+
+
+def test_history_wallclock_uses_golden_iteration_times():
+    """SyncScheduler's dt per event matches hand-computed §V-B values."""
+    from repro.core import ClusterSpec, SDFEELConfig, SyncScheduler, ring
+
+    cfg = SDFEELConfig(
+        clusters=ClusterSpec.uniform(4, 2), topology=ring(2), tau1=2, tau2=2,
+        alpha=1,
+    )
+    sched = SyncScheduler(cfg, latency=MNIST_LATENCY)
+    t_local = 4.8754e-5
+    assert sched.iteration_time("local") == pytest.approx(t_local, rel=1e-12)
+    assert sched.iteration_time("intra") == pytest.approx(t_local + 6.4, rel=1e-12)
+    assert sched.iteration_time("inter") == pytest.approx(
+        t_local + 6.4 + 0.64, rel=1e-12
+    )
+
+
+def test_profile_pacing_reduces_to_golden_for_homogeneous_fleet():
+    """A homogeneous DeviceProfile must not change the priced wall-clock."""
+    from repro.hetero import DeviceProfile, FleetTiming
+
+    timing = FleetTiming(DeviceProfile.homogeneous(6), MNIST_LATENCY)
+    assert timing.sync_event_time("local") == pytest.approx(4.8754e-5, rel=1e-12)
+    assert timing.sync_event_time("inter", alpha=2) == pytest.approx(
+        4.8754e-5 + 6.4 + 2 * 0.64, rel=1e-12
+    )
+    # and the async per-cluster times match AsyncConfig's original pricing
+    from repro.core import AsyncConfig, ClusterSpec, ring
+
+    spec = ClusterSpec.uniform(6, 3)
+    cfg = AsyncConfig(clusters=spec, topology=ring(3),
+                      speeds=np.ones(6), min_batches=4,
+                      alpha_latency=MNIST_LATENCY)
+    np.testing.assert_allclose(
+        timing.cluster_service_times(spec, 4), cfg.iter_times(), rtol=1e-12
+    )

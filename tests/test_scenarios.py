@@ -1,0 +1,101 @@
+"""Named scenario registry tests: resolution, overrides, tiny end-to-end runs."""
+import numpy as np
+import pytest
+
+from repro.core import FederationRuntime, make_run
+from repro.scenarios import (
+    SCENARIOS, build_scenario, get_scenario, list_scenarios,
+)
+
+TINY = dict(num_clients=8, num_clusters=4, num_samples=400)
+
+
+def test_registry_breadth():
+    """The acceptance floor: at least 6 named scenarios resolve via make_run."""
+    assert len(SCENARIOS) >= 6
+    schedulers = {sc.scheduler for sc in list_scenarios()}
+    assert schedulers == {"sync", "round", "async"}
+    # every registered scenario must resolve to a runtime from its name alone
+    for sc in list_scenarios():
+        rt = make_run({"scenario": sc.name, **TINY})
+        assert isinstance(rt, FederationRuntime)
+        assert rt.scheduler.name == sc.scheduler
+
+
+def test_make_run_accepts_bare_name():
+    rt = make_run("mnist-iid-ring")
+    assert isinstance(rt, FederationRuntime)
+    assert rt.scheduler.name == "sync"
+
+
+def test_unknown_scenario_and_bad_override_fail_fast():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        make_run("mnist-warp-drive")
+    with pytest.raises(TypeError, match="unused scenario keys"):
+        make_run({"scenario": "mnist-iid-ring", "tau_one": 3, **TINY})
+
+
+def test_override_reaches_config():
+    rt = make_run({"scenario": "mnist-noniid-ring", "tau1": 7, **TINY})
+    assert rt.scheduler.cfg.tau1 == 7
+    assert rt.scheduler.cfg.clusters.num_clients == 8
+
+
+def test_straggler_scenario_carries_profile():
+    run = build_scenario("straggler-bimodal-async", **TINY)
+    prof = run.runtime.scheduler.cfg.profile
+    assert prof is not None
+    assert prof.heterogeneity() == pytest.approx(10.0)
+    # per-cluster service times differ -> non-trivial event ordering
+    assert run.runtime.scheduler.iter_times.max() > run.runtime.scheduler.iter_times.min()
+
+
+def test_override_profile_follows_run_seed():
+    """A profile passed as an override samples with the run seed, exactly
+    like a template-declared profile (the straggler benchmark relies on the
+    sync baseline and async scenarios drawing the *same* fleet)."""
+    fleet = {"kind": "bimodal-straggler", "straggler_frac": 0.25, "speedup": 10.0}
+    sync_cfg = get_scenario("mnist-noniid-ring").config(profile=fleet, seed=3, **TINY)
+    async_cfg = get_scenario("straggler-bimodal-async").config(seed=3, **TINY)
+    assert sync_cfg["profile_seed"] == async_cfg["profile_seed"] == 3
+    rt_sync = make_run(dict(sync_cfg))
+    rt_async = make_run(dict(async_cfg))
+    np.testing.assert_array_equal(
+        rt_sync.scheduler.profile.speeds,
+        rt_async.scheduler.cfg.profile.speeds,
+    )
+
+
+def test_scenario_seed_determinism():
+    a = build_scenario("straggler-bimodal-async", seed=1, **TINY)
+    b = build_scenario("straggler-bimodal-async", seed=1, **TINY)
+    np.testing.assert_array_equal(
+        a.runtime.scheduler.cfg.profile.speeds,
+        b.runtime.scheduler.cfg.profile.speeds,
+    )
+    for pa, pb in zip(a.dataset.parts, b.dataset.parts):
+        np.testing.assert_array_equal(pa, pb)
+
+
+@pytest.mark.parametrize("name", ["mnist-noniid-ring", "straggler-bimodal-async"])
+def test_tiny_end_to_end_run(name):
+    """The CI smoke pair: a sync and an async scenario actually train."""
+    run = build_scenario(name, **TINY)
+    hist = run.run(4, eval_every=2)
+    assert len(hist.loss) == 2
+    assert np.isfinite(hist.loss).all()
+    assert hist.wallclock[-1] > 0          # simulated wall-clock accumulates
+
+
+def test_round_scenario_runs_compiled_rounds():
+    run = build_scenario("round-compiled-ring", num_samples=400)
+    hist = run.run(2, eval_every=1)
+    assert len(hist.loss) == 2
+    assert run.runtime.iteration == 2 * run.runtime.scheduler.iterations_per_round
+
+
+def test_torus_scenario_topology():
+    rt = make_run({"scenario": "cifar-dirichlet-torus", **TINY})
+    topo = rt.scheduler.cfg.topology
+    assert topo.name == "torus_2d"
+    assert topo.num_servers == 4
