@@ -20,7 +20,7 @@ def main() -> None:
 
     from . import (
         agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
-        moe_ablation, roofline_report, straggler_wallclock,
+        moe_ablation, roofline_report, straggler_wallclock, throughput,
     )
 
     registry = {
@@ -35,6 +35,7 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "agg_backends": agg_backends.main,
         "straggler_wallclock": straggler_wallclock.main,
+        "throughput": throughput.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,
         "cifar": cifar_task.main,

@@ -1,0 +1,306 @@
+"""Protocol-iteration throughput lane: the repo's perf trajectory.
+
+Measures *protocol-iterations per second* — the simulator's native unit of
+work — across the scheduler x backend x rounds_per_step grid, isolating the
+device-resident execution layer:
+
+* the baseline row replays the seed per-round dispatch path byte-for-byte:
+  one jit per round, per-leaf ``jnp.stack`` batch staging on device inside
+  the step, and a blocking ``np.asarray(losses)`` after every round —
+  exactly what the pre-superstep ``RoundScheduler.step`` did;
+* ``rounds_per_step > 1`` rows dispatch one scan-compiled superstep per
+  ``R`` rounds with ``BatchPipeline`` prefetch, donated buffers and
+  device-resident metrics — the headline claim is >= 1.5x the baseline on
+  CPU;
+* ``sync`` / ``async`` rows track the fused-dispatch and bulk-gather paths.
+
+Two model profiles bracket the regimes: ``linear`` (a 7,850-param softmax
+classifier; per-round compute is tiny, so rows measure the runtime layer —
+the regime the superstep exists for) and ``mnist-cnn`` (the paper's 21,840-
+param CNN; conv compute dominates on CPU, so gains are modest — reported for
+honesty, not headlines).  Each row is the best of ``repeats`` timed runs
+(one untimed warmup step first), ending on ``block_until_ready`` of the
+federation state, so rows measure steady-state dispatch throughput, not
+tracing or container noise.  Results land in
+``results/BENCH_throughput.json`` (schema asserted by the CI smoke step).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.throughput            # full lane
+    PYTHONPATH=src python -m benchmarks.throughput --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClusterSpec, make_run
+from repro.data import ClientBatcher, FederatedDataset, iid_partition, mnist_like
+from repro.models import MnistCNN
+
+from .common import RESULTS, ensure_results, timer
+
+JSON_PATH = os.path.join(RESULTS, "BENCH_throughput.json")
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+
+# required keys of one grid row / of the headline block (CI asserts these)
+ROW_KEYS = ("model", "scheduler", "backend", "rounds_per_step", "prefetch",
+            "blocking_metrics", "steps", "protocol_iterations", "seconds",
+            "iters_per_sec")
+HEADLINE_KEYS = ("baseline_ips", "superstep_ips", "speedup",
+                 "superstep_rounds_per_step")
+
+
+class LinearSoftmax:
+    """Tiny softmax classifier: per-round compute ~0, so dispatch dominates."""
+
+    num_classes = 10
+
+    def init(self, rng):
+        return {"w": jax.random.normal(rng, (784, 10), jnp.float32) * 784 ** -0.5,
+                "b": jnp.zeros((10,), jnp.float32)}
+
+    def _logits(self, params, x):
+        return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+    def loss(self, params, batch):
+        logp = jax.nn.log_softmax(self._logits(params, batch["x"]))
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    def accuracy(self, params, batch):
+        return (self._logits(params, batch["x"]).argmax(-1) == batch["y"]).mean()
+
+
+MODELS = {"linear": LinearSoftmax, "mnist-cnn": MnistCNN}
+
+
+def _state(runtime):
+    sched = runtime.scheduler
+    return sched.params if getattr(sched, "params", None) is not None else sched.y
+
+
+def _runtime_stepper():
+    """The device-resident path: just the runtime's own step."""
+    return lambda runtime, src: runtime.step(src)
+
+
+def _seed_round_stepper():
+    """Byte-for-byte replay of the pre-superstep ``RoundScheduler.step``.
+
+    Per round: gather ``tau1*tau2`` batches in a Python list, stack them
+    per-leaf with ``jnp.stack`` (one transfer per mini-batch), one jit
+    dispatch, then the blocking ``np.asarray(losses)`` metrics transfer.
+    """
+    state = {"k": 0}
+
+    def step(runtime, src):
+        sched = runtime.scheduler
+        state["k"] += 1
+        ipr = sched.iterations_per_round
+        base = (state["k"] - 1) * ipr
+        batches = [src(base + i) for i in range(1, ipr + 1)]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches
+        )
+        sched.params, sched.opt_state, losses = sched._round_step(
+            sched.params, sched.opt_state, stacked
+        )
+        np.asarray(losses)
+
+    return step
+
+
+def _measure(make_runtime, make_source, steps: int, iters_per_step: int,
+             repeats: int, make_stepper=_runtime_stepper) -> dict:
+    """Best-of-``repeats`` steady-state protocol-iterations/sec."""
+    best = None
+    for _ in range(repeats):
+        runtime = make_runtime()
+        src = make_source()
+        stepper = make_stepper()
+        stepper(runtime, src)
+        jax.block_until_ready(_state(runtime))
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            stepper(runtime, src)
+        jax.block_until_ready(_state(runtime))
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return {
+        "steps": steps,
+        "protocol_iterations": steps * iters_per_step,
+        "seconds": best,
+        "iters_per_sec": steps * iters_per_step / best,
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    ensure_results()
+    elapsed = timer()
+    if smoke:
+        profiles = ["linear"]
+        n_clients, n_clusters, n_samples, batch = 8, 4, 600, 2
+        rounds_budget, sync_steps, async_steps, repeats = 48, 32, 32, 2
+        superstep_grid = (4, 16)
+    else:
+        profiles = ["linear", "mnist-cnn"]
+        n_clients, n_clusters, n_samples, batch = 8, 4, 600, 2
+        rounds_budget = 128 if FULL else 64
+        sync_steps = async_steps = 64 if FULL else 32
+        repeats = 3
+        superstep_grid = (4, 16, 32) if FULL else (4, 16)
+    tau1 = tau2 = 2
+    ipr = tau1 * tau2
+    seed = 0
+    data = mnist_like(n_samples, seed=seed)
+    train, _ = data.split(0.9)
+    ds = FederatedDataset(train, iid_partition(train.y, n_clients, seed=seed))
+    spec = ClusterSpec(
+        n_clients,
+        tuple(i * n_clusters // n_clients for i in range(n_clients)),
+        ds.data_sizes(),
+    )
+    backends = ["dense"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+
+    rows = []
+
+    def run_row(model_name, scheduler, backend, rounds_per_step, prefetch,
+                blocking, row):
+        rows.append(dict(model=model_name, scheduler=scheduler, backend=backend,
+                         rounds_per_step=rounds_per_step, prefetch=prefetch,
+                         blocking_metrics=blocking, **row))
+        r = rows[-1]
+        print(f"  {model_name:9s} {scheduler:6s} backend={backend:6s} "
+              f"R={rounds_per_step:<3d} prefetch={str(prefetch):5s} "
+              f"blocking={str(blocking):5s} {r['iters_per_sec']:10.1f} "
+              f"proto-iters/s ({r['protocol_iterations']} iters in "
+              f"{r['seconds']:.2f}s)")
+
+    def batch_source():
+        rng = np.random.default_rng(seed)
+        return lambda k: ds.stacked_batch(batch, rng)
+
+    for model_name in profiles:
+        model_cls = MODELS[model_name]
+        # CNN rounds are ~100x more expensive on CPU; shrink its budgets so
+        # the lane stays fast without touching the headline (linear) rows
+        scale = 1 if model_name == "linear" else 4
+        r_budget = max(8, rounds_budget // scale)
+        s_steps, a_steps = max(8, sync_steps // scale), max(8, async_steps // scale)
+        for backend in backends:
+            # -- round scheduler: the superstep trajectory --------------------
+            # (rps, prefetch, seed_path): the seed row drives the runtime
+            # through the pre-superstep staging + blocking-metrics code path
+            grid = [(1, False, True), (1, True, False)] + [
+                (r, True, False) for r in superstep_grid
+            ]
+            for rps, prefetch, seed_path in grid:
+                def make_rt(rps=rps, prefetch=prefetch):
+                    return make_run({
+                        "scheduler": "round", "model": model_cls(),
+                        "num_clients": n_clients, "num_clusters": n_clusters,
+                        "tau1": tau1, "tau2": tau2, "alpha": 2,
+                        "learning_rate": 0.05, "backend": backend, "seed": seed,
+                        "rounds_per_step": rps, "prefetch": prefetch,
+                    })
+
+                steps = max(2, r_budget // rps)
+                stepper = _seed_round_stepper if seed_path else _runtime_stepper
+                row = _measure(make_rt, batch_source, steps, rps * ipr,
+                               repeats, make_stepper=stepper)
+                run_row(model_name, "round", backend, rps, prefetch, seed_path, row)
+
+            # -- sync scheduler: fused donated per-iteration dispatch ---------
+            for prefetch in (False, True):
+                def make_rt(prefetch=prefetch):
+                    return make_run({
+                        "scheduler": "sync", "model": model_cls(),
+                        "clusters": spec, "topology": "ring",
+                        "tau1": tau1, "tau2": tau2, "alpha": 2,
+                        "learning_rate": 0.05, "backend": backend, "seed": seed,
+                        "prefetch": prefetch,
+                    })
+
+                row = _measure(make_rt, batch_source, s_steps, 1, repeats)
+                run_row(model_name, "sync", backend, 1, prefetch, False, row)
+
+            # -- async scheduler: bulk gather + event prefetch ----------------
+            for prefetch in (False, True):
+                def make_rt(prefetch=prefetch):
+                    return make_run({
+                        "scheduler": "async", "model": model_cls(),
+                        "clusters": spec, "topology": "ring",
+                        "learning_rate": 0.05, "heterogeneity": 4.0,
+                        "min_batches": 2, "theta_max": 6,
+                        "backend": backend, "seed": seed, "prefetch": prefetch,
+                    })
+
+                row = _measure(make_rt, lambda: ClientBatcher(ds, batch, seed=seed),
+                               a_steps, 1, repeats)
+                run_row(model_name, "async", backend, 1, prefetch, False, row)
+
+    # headline: best superstep row vs the seed per-round dispatch baseline
+    baseline = next(
+        r for r in rows
+        if r["model"] == "linear" and r["scheduler"] == "round"
+        and r["backend"] == "dense" and r["rounds_per_step"] == 1
+        and not r["prefetch"] and r["blocking_metrics"]
+    )
+    best = max(
+        (r for r in rows
+         if r["model"] == "linear" and r["scheduler"] == "round"
+         and r["backend"] == "dense" and r["rounds_per_step"] > 1
+         and r["prefetch"]),
+        key=lambda r: r["iters_per_sec"],
+    )
+    speedup = best["iters_per_sec"] / baseline["iters_per_sec"]
+
+    payload = {
+        "config": {
+            "num_clients": n_clients, "num_clusters": n_clusters,
+            "num_samples": n_samples, "tau1": tau1, "tau2": tau2,
+            "batch": batch, "repeats": repeats, "seed": seed,
+            "smoke": smoke, "full": FULL,
+            "jax_backend": jax.default_backend(),
+        },
+        "rows": rows,
+        "headline": {
+            "baseline_ips": baseline["iters_per_sec"],
+            "superstep_ips": best["iters_per_sec"],
+            "superstep_rounds_per_step": best["rounds_per_step"],
+            "speedup": speedup,
+        },
+        "bench_seconds": elapsed(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {JSON_PATH}")
+    print(f"  superstep R={best['rounds_per_step']} + prefetch: "
+          f"{speedup:.2f}x over per-round dispatch "
+          f"({best['iters_per_sec']:.1f} vs {baseline['iters_per_sec']:.1f} "
+          f"proto-iters/s)")
+
+    floor = 1.0 if smoke else 1.5
+    assert speedup >= floor, (
+        f"superstep throughput regressed: {speedup:.2f}x over the per-round "
+        f"dispatch baseline (need >= {floor}x)"
+    )
+    return {
+        "baseline_ips": baseline["iters_per_sec"],
+        "superstep_ips": best["iters_per_sec"],
+        "speedup": speedup,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for the CI regression gate")
+    main(smoke=ap.parse_args().smoke)

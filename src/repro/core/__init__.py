@@ -8,6 +8,7 @@ from .backends import (
     BACKEND_REGISTRY, register_backend, resolve_backend, select_auto_backend,
 )
 from .latency import LatencyModel, MNIST_LATENCY, CIFAR_LATENCY
+from .pipeline import BatchPipeline, gather_client_batches, stack_window
 from .runtime import (
     FederationRuntime, Scheduler, StepEvent, SyncScheduler, RoundScheduler,
     AsyncScheduler, TrainHistory, make_run, register_scheduler, stacked_init,
@@ -27,6 +28,7 @@ __all__ = [
     "BACKEND_REGISTRY", "register_backend", "resolve_backend",
     "select_auto_backend",
     "LatencyModel", "MNIST_LATENCY", "CIFAR_LATENCY",
+    "BatchPipeline", "gather_client_batches", "stack_window",
     "FederationRuntime", "Scheduler", "StepEvent", "SyncScheduler",
     "RoundScheduler", "AsyncScheduler", "make_run", "register_scheduler",
     "stacked_init",

@@ -1,0 +1,146 @@
+"""Device-resident batch staging: overlap host batch prep with device compute.
+
+Every scheduler used to assemble its batches *inside* the step, on the host,
+while the accelerator sat idle: ``RoundScheduler`` re-gathered and stacked
+``tau1*tau2`` mini-batches in Python each round, ``AsyncScheduler`` looped
+client-by-client.  Because JAX dispatch is asynchronous, the fix is purely
+host-side scheduling — stage the *next* step's batches (stack + ``device_put``)
+while the device is still executing the current step, and hand the step an
+array that is already resident when it is dispatched.
+
+Three pieces:
+
+``BatchPipeline``
+    A double-buffered prefetcher over an *indexed* producer
+    ``k -> host batch`` (the sync/round ``batch_source`` contract).  The
+    buffer is warmed ``depth`` entries ahead; each ``get(k)`` returns the
+    staged device batch for step ``k`` and immediately stages ``k + depth``,
+    so host stacking and the host->device copy overlap the in-flight step.
+    Batches are consumed in exactly the order produced, but a *stateful*
+    producer is drawn from up to ``depth`` steps ahead of consumption —
+    staged batches that are never consumed (pipeline dropped or rebuilt) are
+    not replayed to the producer.
+    Producers signal exhaustion by raising ``StopIteration`` or
+    ``IndexError`` (the natural failure of ``lambda k: batches[k - 1]``);
+    lookahead past the end is absorbed, and only a ``get`` beyond the last
+    real batch raises ``StopIteration``.
+
+``stack_window``
+    Pre-stacks ``count`` consecutive batches from an indexed source into one
+    leading-axis pytree — the superstep input of
+    ``round_engine.build_fl_round_step``.
+
+``gather_client_batches``
+    The async per-client gather as one bulk call.  Sources may implement
+    ``next_batches(clients, count)`` (``repro.data.ClientBatcher`` does, as a
+    vectorized draw); sources that only offer the legacy per-call
+    ``next_batch(client)`` go through a compatible sequential shim.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["BatchPipeline", "stack_window", "gather_client_batches", "device_batch"]
+
+
+def device_batch(batch: PyTree) -> PyTree:
+    """Start the host->device transfer of every leaf (non-blocking)."""
+    return jax.tree.map(jnp.asarray, batch)
+
+
+def _stack(*xs):
+    """Stack host-side when every leaf is host-resident (one transfer later)."""
+    if all(isinstance(x, np.ndarray) for x in xs):
+        return np.stack(xs)
+    return jnp.stack([jnp.asarray(x) for x in xs])
+
+
+def stack_window(batch_source: Callable[[int], PyTree], start: int,
+                 count: int) -> PyTree:
+    """Stack batches ``start .. start + count - 1`` on a new leading axis."""
+    batches = [batch_source(start + i) for i in range(count)]
+    return jax.tree.map(_stack, *batches)
+
+
+class BatchPipeline:
+    """Double-buffered prefetch over an indexed batch producer.
+
+    ``get`` is strictly sequential from ``start`` — a scheduler that is asked
+    to step out of order (or is handed a different source) should drop the
+    pipeline and build a fresh one at the new index; ``next_index`` exposes
+    what the pipeline expects so callers can detect that cheaply.
+    """
+
+    def __init__(self, producer: Callable[[int], PyTree], start: int = 1,
+                 depth: int = 2,
+                 transfer: Callable[[PyTree], PyTree] = device_batch):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._producer = producer
+        self._transfer = transfer
+        self._depth = depth
+        self._next_produce = start
+        self._next_get = start
+        self._exhausted = False
+        self._buf: collections.deque = collections.deque()
+        self._fill()
+
+    @property
+    def next_index(self) -> int:
+        """Index the next ``get`` must request."""
+        return self._next_get
+
+    @property
+    def exhausted(self) -> bool:
+        """True once the producer has signaled end-of-stream."""
+        return self._exhausted and not self._buf
+
+    def _fill(self) -> None:
+        while not self._exhausted and len(self._buf) < self._depth:
+            try:
+                host = self._producer(self._next_produce)
+            except (StopIteration, IndexError):
+                self._exhausted = True
+                return
+            self._buf.append(self._transfer(host))
+            self._next_produce += 1
+
+    def get(self, k: int) -> PyTree:
+        """Device batch for step ``k``; stages ``k + depth`` before returning."""
+        if k != self._next_get:
+            raise ValueError(
+                f"BatchPipeline is sequential: expected get({self._next_get}), "
+                f"got get({k})"
+            )
+        if not self._buf:
+            raise StopIteration(f"batch producer exhausted before index {k}")
+        batch = self._buf.popleft()
+        self._next_get += 1
+        self._fill()
+        return batch
+
+
+def gather_client_batches(batch_source, clients: Sequence[int],
+                          count: int) -> PyTree:
+    """``count`` batches for each of ``clients``, leaves (len(clients), count, ...).
+
+    Prefers the bulk ``next_batches(clients, count)`` method; sources exposing
+    only the legacy per-call ``next_batch(client)`` are served by a sequential
+    shim that draws in the same (client-major) order, so both paths consume a
+    stateful source's streams identically.
+    """
+    bulk: Optional[Callable] = getattr(batch_source, "next_batches", None)
+    if bulk is not None:
+        return bulk(list(clients), count)
+    per_client = []
+    for c in clients:
+        draws = [batch_source.next_batch(c) for _ in range(count)]
+        per_client.append(jax.tree.map(_stack, *draws))
+    return jax.tree.map(_stack, *per_client)

@@ -17,6 +17,13 @@ Semantics are identical to stepping ``build_fl_train_step`` with the
 schedule's events (verified in tests/test_round_engine.py); the batch input
 carries a leading round dimension: leaves (tau1*tau2, C, b, ...).
 
+With ``rounds_per_step=R > 1`` the returned step is a *superstep*: an outer
+``lax.scan`` over ``R`` full Algorithm-1 rounds compiled as one XLA program,
+so a training run becomes a handful of dispatches instead of one per round.
+The batch input grows a matching leading dimension
+(``R * tau1 * tau2``, C, b, ...) and the semantics are bit-identical to
+stepping the ``R = 1`` program ``R`` times (tests/test_runtime.py).
+
 The training driver for this engine is ``runtime.RoundScheduler`` — this
 module only builds the compiled round step.
 """
@@ -34,13 +41,15 @@ PyTree = Any
 __all__ = ["build_fl_round_step"]
 
 
-def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None):
+def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
+                        rounds_per_step: int = 1):
     """Returns round_step(params, opt_state, batches) -> (params, opt_state, losses).
 
-    ``batches`` leaves: (tau1 * tau2, C, per_client_batch, ...); ``losses``:
-    (tau1 * tau2,) mean loss per iteration.  ``backend`` is any
-    ``AggregationBackend`` (default: dense Lemma-1 einsum); its traced
-    ``transition`` is inlined into the compiled round.
+    ``batches`` leaves: (rounds_per_step * tau1 * tau2, C, per_client_batch,
+    ...); ``losses``: (rounds_per_step * tau1 * tau2,) mean loss per
+    iteration.  ``backend`` is any ``AggregationBackend`` (default: dense
+    Lemma-1 einsum); its traced ``transition`` is inlined into the compiled
+    round(s).
     """
     from .backends import resolve_backend
 
@@ -48,6 +57,8 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None):
     if backend is None:
         backend = resolve_backend("dense", proto.clusters, proto.P(), fl.alpha)
     tau1, tau2 = fl.tau1, fl.tau2
+    if rounds_per_step < 1:
+        raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
 
     def local_iter(carry, batch):
         params, opt_state = carry
@@ -65,15 +76,31 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None):
         params = backend.transition(params, "intra")
         return (params, opt_state), losses
 
-    def round_step(params, opt_state, batches):
+    def one_round(carry, batches):
+        # batches leaves: (tau1 * tau2, C, b, ...) — exactly one round's worth
         seg = jax.tree.map(
             lambda x: x.reshape((tau2, tau1) + x.shape[1:]), batches
         )
-        (params, opt_state), losses = jax.lax.scan(segment, (params, opt_state), seg)
+        (params, opt_state), losses = jax.lax.scan(segment, carry, seg)
         # The last segment applied T_intra = V B; composing with
         # T_inter = V P^a B is exact because B V = I_D (each cluster's
         # aggregate re-aggregates to itself): T_intra @ T_inter = T_inter.
         params = backend.transition(params, "inter")
-        return params, opt_state, losses.reshape(tau1 * tau2)
+        return (params, opt_state), losses.reshape(tau1 * tau2)
 
-    return round_step
+    ipr = tau1 * tau2
+
+    def round_step(params, opt_state, batches):
+        (params, opt_state), losses = one_round((params, opt_state), batches)
+        return params, opt_state, losses
+
+    def superstep(params, opt_state, batches):
+        rounds = jax.tree.map(
+            lambda x: x.reshape((rounds_per_step, ipr) + x.shape[1:]), batches
+        )
+        (params, opt_state), losses = jax.lax.scan(
+            one_round, (params, opt_state), rounds
+        )
+        return params, opt_state, losses.reshape(rounds_per_step * ipr)
+
+    return round_step if rounds_per_step == 1 else superstep

@@ -14,11 +14,12 @@ Scheduler             Paper mapping
                       by the scheduled transition ``T_k`` in
                       ``{I, V B, V P^alpha B}`` (eqs. 2-4), applied as the
                       dense einsum or the fused Pallas kernels.
-``RoundScheduler``    Whole-round SPMD path.  Each step is one full
-                      Algorithm-1 round — ``tau1 * tau2`` local iterations
-                      with intra-cluster aggregation every ``tau1`` inside a
-                      ``lax.scan`` and the inter-cluster gossip at the round
-                      boundary — compiled as a single XLA program
+``RoundScheduler``    Whole-round SPMD path.  Each step is ``rounds_per_step``
+                      full Algorithm-1 rounds — ``tau1 * tau2`` local
+                      iterations with intra-cluster aggregation every
+                      ``tau1`` inside a ``lax.scan``, the inter-cluster
+                      gossip at each round boundary, and an outer scan over
+                      the rounds — compiled as a single XLA program
                       (``round_engine.build_fl_round_step``).
 ``AsyncScheduler``    Section IV asynchronous SD-FEEL.  Each step pops one
                       edge-cluster event from a wall-clock priority queue,
@@ -44,6 +45,14 @@ ring-ppermute collectives).  The scenario key ``"backend"`` selects one;
         "backend": "auto",        # or "dense" | "pallas" | "collective"
     })
     history = runtime.run(200, batch_fn, eval_batch, eval_every=20)
+
+All three schedulers execute device-resident: each step is a fused jitted
+program with its big operands donated (params/opt_state updated in place),
+batches are pre-staged on device by ``pipeline.BatchPipeline`` /
+``pipeline.gather_client_batches`` while the previous step computes, and
+per-step metrics stay on device until a logging or eval boundary, so the
+host never serializes the dispatch pipeline (``benchmarks/throughput.py``
+tracks the resulting protocol-iterations/sec).
 
 New regimes (e.g. the semi-async deadline sampling of arXiv:2104.12678)
 plug in via ``register_scheduler`` and become available to the config-driven
@@ -109,13 +118,17 @@ class StepEvent:
     path, "round" for a compiled round, "cluster" for an async cluster
     firing).  ``iteration`` is the protocol-iteration count after the step,
     ``dt`` the Section V-B wall-clock the step consumed.
+
+    ``losses`` (round steps) is left as a *device* array so emitting a step
+    never blocks the dispatch pipeline; materialize it with ``float(...)`` /
+    ``np.asarray(...)`` only at logging/eval boundaries.
     """
 
     kind: str
     iteration: int
     dt: float = 0.0
     cluster: Optional[int] = None
-    losses: Optional[np.ndarray] = None
+    losses: Optional[Any] = None
 
 
 def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
@@ -200,17 +213,34 @@ class SyncScheduler:
     shape (C, per_client_batch, ...).  ``backend`` is an
     ``AggregationBackend`` name/instance (or ``"auto"``); when omitted it is
     derived from the legacy ``cfg.aggregation_impl`` field.
+
+    Each protocol iteration is ONE donated XLA dispatch: the vmapped local
+    SGD step and the scheduled Lemma-1 transition are fused into a single
+    jitted function cached per event kind, and the stacked params are donated
+    so the update happens in place.  ``step`` stages batches through a
+    :class:`~repro.core.pipeline.BatchPipeline`, overlapping host batch prep
+    with the in-flight device step (``prefetch=False`` restores the
+    host-synchronous seed behavior — only useful as a benchmark baseline).
     """
 
     name = "sync"
 
     def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
-                 backend=None, profile=None):
+                 backend=None, profile=None, prefetch: bool = True):
         self.cfg = cfg
         self.latency = latency
         self.profile = profile
+        self.prefetch = prefetch
         self.params: PyTree = None
         self._backend_spec = backend
+        self._pipeline = None
+        self._pipeline_src = None
+        # §V-B per-event wall-clock depends only on construction args — price
+        # each event kind once instead of re-summing every step
+        self._event_times = {
+            e: _event_time(latency, cfg.alpha, e, profile)
+            for e in ("local", "intra", "inter")
+        }
 
     def bind(self, model, seed: int) -> None:
         cfg = self.cfg
@@ -223,11 +253,17 @@ class SyncScheduler:
         self.backend = resolve_backend(spec, cfg.clusters, cfg.P(), cfg.alpha)
         lr = cfg.learning_rate
 
-        def local_step(params, batch):
-            grads = jax.vmap(jax.grad(model.loss))(params, batch)
-            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        def make_step(event):
+            def fused(params, batch):
+                grads = jax.vmap(jax.grad(model.loss))(params, batch)
+                params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+                if event != "local":
+                    params = self.backend.transition(params, event)
+                return params
 
-        self._local_step = jax.jit(local_step)
+            return jax.jit(fused, donate_argnums=0)
+
+        self._step_fns = {e: make_step(e) for e in ("local", "intra", "inter")}
 
         def global_model(params):
             return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
@@ -235,20 +271,31 @@ class SyncScheduler:
         self._global_model = jax.jit(global_model)
 
     # -- one protocol iteration (local + scheduled aggregation) -------------
-    def advance(self, k: int, stacked_batch: dict) -> str:
-        batch = jax.tree.map(jnp.asarray, stacked_batch)
-        self.params = self._local_step(self.params, batch)
+    def _apply(self, k: int, staged_batch) -> str:
         event = self.cfg.event_at(k)
-        if event in ("intra", "inter"):
-            self.params = self.backend.transition(self.params, event)
+        self.params = self._step_fns[event](self.params, staged_batch)
         return event
 
+    def advance(self, k: int, stacked_batch: dict) -> str:
+        return self._apply(k, jax.tree.map(jnp.asarray, stacked_batch))
+
     def iteration_time(self, event: str) -> float:
-        return _event_time(self.latency, self.cfg.alpha, event, self.profile)
+        return self._event_times[event]
+
+    def _next_batch(self, k: int, batch_source) -> PyTree:
+        from .pipeline import BatchPipeline, device_batch
+
+        if not self.prefetch:
+            return device_batch(batch_source(k))
+        if (self._pipeline is None or self._pipeline_src is not batch_source
+                or self._pipeline.next_index != k):
+            self._pipeline = BatchPipeline(batch_source, start=k)
+            self._pipeline_src = batch_source
+        return self._pipeline.get(k)
 
     def step(self, k: int, batch_source) -> StepEvent:
-        event = self.advance(k, batch_source(k))
-        return StepEvent(kind=event, iteration=k, dt=self.iteration_time(event))
+        event = self._apply(k, self._next_batch(k, batch_source))
+        return StepEvent(kind=event, iteration=k, dt=self._event_times[event])
 
     def global_params(self) -> PyTree:
         """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
@@ -260,32 +307,64 @@ class SyncScheduler:
 # ---------------------------------------------------------------------------
 
 class RoundScheduler:
-    """One step == one scan-compiled tau1*tau2 Algorithm-1 round.
+    """One step == ``rounds_per_step`` scan-compiled tau1*tau2 Algorithm-1 rounds.
 
     ``batch_source`` contract: callable ``k -> stacked batch`` indexed by the
     *protocol iteration* — step ``r`` consumes iterations
-    ``(r-1)*tau1*tau2 + 1 .. r*tau1*tau2``.
+    ``(r-1)*R*tau1*tau2 + 1 .. r*R*tau1*tau2`` for ``R = rounds_per_step``.
+
+    This is the device-resident fast path: each step is one donated XLA
+    dispatch covering ``R`` full Algorithm-1 rounds (an outer ``lax.scan`` in
+    ``round_engine.build_fl_round_step``), the stacked params/opt_state are
+    donated so the federation state is updated in place, the next superstep's
+    batches are pre-stacked and transferred by a
+    :class:`~repro.core.pipeline.BatchPipeline` while the current one
+    computes, and ``StepEvent.losses`` stays a device array so the host never
+    blocks on metrics between supersteps (materialize with ``float``/
+    ``np.asarray`` at logging boundaries).
     """
 
     name = "round"
 
     def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
-                 backend=None, profile=None):
+                 backend=None, profile=None, rounds_per_step: int = 1,
+                 prefetch: bool = True):
+        if rounds_per_step < 1:
+            raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
         self.fl = fl
         self.optimizer = optimizer
         self.latency = latency
         self.profile = profile
+        self.rounds_per_step = rounds_per_step
+        self.prefetch = prefetch
         self.params: PyTree = None
         self.opt_state: PyTree = None
         self._backend_spec = backend
+        self._pipeline = None
+        self._pipeline_src = None
+        self._proto = fl.protocol()
+        # §V-B wall-clock of one full round, priced once per event schedule
+        self._round_time = sum(
+            _event_time(latency, fl.alpha, self._proto.event_at(i), profile)
+            for i in range(1, self.iterations_per_round + 1)
+        )
 
     @property
     def iterations_per_round(self) -> int:
         return self.fl.tau1 * self.fl.tau2
 
+    @property
+    def iterations_per_step(self) -> int:
+        """Protocol iterations consumed by one (super)step."""
+        return self.iterations_per_round * self.rounds_per_step
+
     def rounds_for(self, iterations: int) -> int:
         """Whole compiled rounds covering ``iterations`` protocol iterations."""
         return max(1, -(-iterations // self.iterations_per_round))
+
+    def steps_for(self, iterations: int) -> int:
+        """Scheduler steps (superstep dispatches) covering ``iterations``."""
+        return -(-self.rounds_for(iterations) // self.rounds_per_step)
 
     def bind(self, model, seed: int) -> None:
         from .. import optim
@@ -293,7 +372,6 @@ class RoundScheduler:
 
         self.model = model
         fl = self.fl
-        self._proto = fl.protocol()
         opt = self.optimizer or optim.sgd(fl.learning_rate)
         self.optimizer = opt
         self.params = stacked_init(model, fl.num_clients, seed)
@@ -307,32 +385,41 @@ class RoundScheduler:
             spec, self._proto.clusters, self._proto.P(), fl.alpha
         )
         self._round_step = jax.jit(
-            build_fl_round_step(model, opt, fl, backend=self.backend)
+            build_fl_round_step(model, opt, fl, backend=self.backend,
+                                rounds_per_step=self.rounds_per_step),
+            donate_argnums=(0, 1),
         )
 
     def round_time(self) -> float:
-        """Section V-B wall-clock of one full round."""
-        return sum(
-            _event_time(self.latency, self.fl.alpha, self._proto.event_at(i),
-                        self.profile)
-            for i in range(1, self.iterations_per_round + 1)
-        )
+        """Section V-B wall-clock of one full round (priced once at init)."""
+        return self._round_time
+
+    def _superstep_batches(self, k: int, batch_source) -> PyTree:
+        from .pipeline import BatchPipeline, device_batch, stack_window
+
+        ips = self.iterations_per_step
+
+        def producer(step_idx: int) -> PyTree:
+            return stack_window(batch_source, (step_idx - 1) * ips + 1, ips)
+
+        if not self.prefetch:
+            return device_batch(producer(k))
+        if (self._pipeline is None or self._pipeline_src is not batch_source
+                or self._pipeline.next_index != k):
+            self._pipeline = BatchPipeline(producer, start=k)
+            self._pipeline_src = batch_source
+        return self._pipeline.get(k)
 
     def step(self, k: int, batch_source) -> StepEvent:
-        ipr = self.iterations_per_round
-        base = (k - 1) * ipr
-        batches = [batch_source(base + i) for i in range(1, ipr + 1)]
-        stacked = jax.tree.map(
-            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches
-        )
+        stacked = self._superstep_batches(k, batch_source)
         self.params, self.opt_state, losses = self._round_step(
             self.params, self.opt_state, stacked
         )
         return StepEvent(
             kind="round",
-            iteration=k * ipr,
-            dt=self.round_time(),
-            losses=np.asarray(losses),
+            iteration=k * self.iterations_per_step,
+            dt=self.rounds_per_step * self._round_time,
+            losses=losses,
         )
 
     def global_params(self) -> PyTree:
@@ -348,16 +435,27 @@ class AsyncScheduler:
     """Priority-queue cluster events with staleness-aware mixing.
 
     ``batch_source`` contract: an object with ``next_batch(client) -> batch``
-    (e.g. ``repro.data.ClientBatcher``).  The eq. 21-22 staleness mixing
-    ``P_t`` is applied through ``backend.inter_cluster``, so the async path
-    inherits whichever optimized mixing path the backend provides.
+    (e.g. ``repro.data.ClientBatcher``); sources additionally exposing the
+    bulk ``next_batches(clients, count)`` skip the per-client Python loop
+    entirely (see ``pipeline.gather_client_batches``).  The eq. 21-22
+    staleness mixing ``P_t`` is applied through ``backend.inter_cluster``, so
+    the async path inherits whichever optimized mixing path the backend
+    provides.
+
+    The eq. 20 cluster update runs as one donated dispatch over the full
+    stacked ``y`` (the fired cluster enters as a traced dynamic index), and
+    because the queue already determines the next event when a step finishes,
+    the next cluster's batch gather is staged while the device is still
+    executing the current update (``prefetch=False`` disables the overlap).
     """
 
     name = "async"
 
-    def __init__(self, cfg, backend=None):
+    def __init__(self, cfg, backend=None, prefetch: bool = True):
         self.cfg = cfg
+        self.prefetch = prefetch
         self._backend_spec = backend
+        self._prefetched = None
 
     def bind(self, model, seed: int) -> None:
         cfg = self.cfg
@@ -383,7 +481,16 @@ class AsyncScheduler:
         heapq.heapify(self._queue)
         self._m_tilde = jnp.asarray(cfg.clusters.m_tilde(), jnp.float32)
         lr = cfg.learning_rate
-        theta_max = int(self.theta.max())
+        self._theta_max = theta_max = int(self.theta.max())
+        # per-cluster constants staged once instead of per event
+        self._thetas = [
+            jnp.asarray(self.theta[cfg.clusters.clients_of(j)], jnp.int32)
+            for j in range(d)
+        ]
+        self._m_hats = [
+            jnp.asarray(cfg.clusters.m_hat()[cfg.clusters.clients_of(j)], jnp.float32)
+            for j in range(d)
+        ]
 
         def client_delta(params, batches, theta_i):
             """theta_i masked local epochs; returns normalized update (eq 19)."""
@@ -401,17 +508,25 @@ class AsyncScheduler:
                 lambda wf, w0_: (wf - w0_) / theta_i.astype(jnp.float32), w_final, params
             )
 
-        def cluster_update(y_d, batches, thetas, m_hat):
-            """eq. 20: y^ = y + theta_bar sum_i m^_i Delta_i (vmap over clients)."""
+        def cluster_update(y, d_idx, batches, thetas, m_hat):
+            """eq. 20 over the full stack: y[d] <- y[d] + theta_bar sum m^ Delta.
+
+            ``y`` is donated (updated in place); ``d_idx`` is a traced index,
+            so one compiled program serves every cluster of a given size.
+            """
+            y_d = jax.tree.map(lambda w: w[d_idx], y)
             deltas = jax.vmap(client_delta, in_axes=(None, 0, 0))(y_d, batches, thetas)
             theta_bar = jnp.sum(m_hat * thetas.astype(jnp.float32))
             return jax.tree.map(
-                lambda y, dl: y + theta_bar * jnp.einsum("c...,c->...", dl, m_hat),
+                lambda w, yd, dl: w.at[d_idx].set(
+                    yd + theta_bar * jnp.einsum("c...,c->...", dl, m_hat)
+                ),
+                y,
                 y_d,
                 deltas,
             )
 
-        self._cluster_update = jax.jit(cluster_update)
+        self._cluster_update = jax.jit(cluster_update, donate_argnums=0)
         self.backend = resolve_backend(
             self._backend_spec, cfg.clusters,
             mixing_matrix(cfg.topology, cfg.clusters.m_tilde()), 1,
@@ -422,36 +537,37 @@ class AsyncScheduler:
 
         self._global = jax.jit(global_model)
 
+    def _gather(self, batch_source, d: int) -> PyTree:
+        """Bulk per-client gather for cluster ``d``, staged on device."""
+        from .pipeline import device_batch, gather_client_batches
+
+        return device_batch(gather_client_batches(
+            batch_source, self.cfg.clusters.clients_of(d), self._theta_max
+        ))
+
     def step(self, k: int, batch_source) -> StepEvent:
         cfg = self.cfg
         prev_clock = self.clock
         self.clock, d = heapq.heappop(self._queue)
-        clients = cfg.clusters.clients_of(d)
-        theta_max = int(self.theta.max())
 
-        # gather theta_max batches per client (masked beyond theta_i)
-        xs, ys = [], []
-        for c in clients:
-            bx, by = [], []
-            for _ in range(theta_max):
-                b = batch_source.next_batch(c)
-                bx.append(b["x"])
-                by.append(b["y"])
-            xs.append(np.stack(bx))
-            ys.append(np.stack(by))
-        batches = {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
-        thetas = jnp.asarray(self.theta[clients], jnp.int32)
-        m_hat = jnp.asarray(cfg.clusters.m_hat()[clients], jnp.float32)
+        # theta_max batches per client (masked beyond theta_i); usually staged
+        # by the previous step's prefetch while the device was busy
+        if (self._prefetched is not None and self._prefetched[0] is batch_source
+                and self._prefetched[1] == d):
+            batches = self._prefetched[2]
+        else:
+            batches = self._gather(batch_source, d)
+        self._prefetched = None
 
-        y_d = jax.tree.map(lambda w: w[d], self.y)
-        y_hat_d = self._cluster_update(y_d, batches, thetas, m_hat)
-        y = jax.tree.map(lambda w, yh: w.at[d].set(yh), self.y, y_hat_d)
+        self.y = self._cluster_update(
+            self.y, d, batches, self._thetas[d], self._m_hats[d]
+        )
 
         # staleness-aware inter-cluster mixing (eq. 21-22) via the backend
         gaps = (self.t - self.last_update).astype(np.float64)
         gaps[d] = 0.0
         p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
-        self.y = self.backend.inter_cluster(y, jnp.asarray(p_t, jnp.float32), 1)
+        self.y = self.backend.inter_cluster(self.y, jnp.asarray(p_t, jnp.float32), 1)
 
         self.t += 1
         self.last_update[d] = self.t
@@ -461,6 +577,11 @@ class AsyncScheduler:
         if self._dropout is not None:
             service *= self._dropout.attempts(d)
         heapq.heappush(self._queue, (self.clock + service, d))
+        if self.prefetch:
+            # the queue top IS the next event — gather its batches now, while
+            # the dispatched update/mixing still run on device
+            nxt = self._queue[0][1]
+            self._prefetched = (batch_source, nxt, self._gather(batch_source, nxt))
         return StepEvent(
             kind="cluster", iteration=self.t, dt=self.clock - prev_clock, cluster=d
         )
@@ -488,8 +609,14 @@ class FederationRuntime:
         self.iteration = 0
         self._k = 0
         scheduler.bind(model, seed)
-        self._eval_loss = jax.jit(lambda p, b: model.loss(p, b))
-        self._eval_acc = jax.jit(model.accuracy) if hasattr(model, "accuracy") else None
+        has_acc = hasattr(model, "accuracy")
+
+        def eval_fn(p, b):
+            # loss + accuracy fused into one program -> one blocking transfer
+            return model.loss(p, b), (model.accuracy(p, b) if has_acc else None)
+
+        self._eval_fn = jax.jit(eval_fn)
+        self._eval_batch_cache: Optional[tuple] = None
 
     def step(self, batch_source) -> StepEvent:
         """Advance the federation by one schedule unit."""
@@ -504,10 +631,16 @@ class FederationRuntime:
 
     def evaluate(self, eval_batch) -> tuple[float, Optional[float]]:
         g = self.global_params()
-        batch = jax.tree.map(jnp.asarray, eval_batch)
-        loss = float(self._eval_loss(g, batch))
-        acc = float(self._eval_acc(g, batch)) if self._eval_acc is not None else None
-        return loss, acc
+        # the eval batch rarely changes between calls — upload it once; the
+        # key includes every leaf's identity so replacing an entry of the
+        # same dict in place still invalidates the cached device copy
+        key = (id(eval_batch), tuple(id(l) for l in jax.tree.leaves(eval_batch)))
+        cache = self._eval_batch_cache
+        if cache is None or cache[0] != key:
+            cache = (key, eval_batch, jax.tree.map(jnp.asarray, eval_batch))
+            self._eval_batch_cache = cache
+        loss, acc = jax.device_get(self._eval_fn(g, cache[2]))
+        return float(loss), (None if acc is None else float(acc))
 
     def run(
         self,
@@ -606,6 +739,7 @@ def _make_sync(s: dict) -> SyncScheduler:
     return SyncScheduler(
         cfg, latency=s.pop("latency", None), backend=s.pop("backend", None),
         profile=_as_profile(s, clusters.num_clients),
+        prefetch=s.pop("prefetch", True),
     )
 
 
@@ -628,6 +762,8 @@ def _make_round(s: dict) -> RoundScheduler:
     return RoundScheduler(
         fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None),
         backend=s.pop("backend", None), profile=_as_profile(s, fl.num_clients),
+        rounds_per_step=s.pop("rounds_per_step", 1),
+        prefetch=s.pop("prefetch", True),
     )
 
 
@@ -665,7 +801,9 @@ def _make_async(s: dict) -> AsyncScheduler:
         alpha_latency=s.pop("latency", None),
         profile=profile,
     )
-    return AsyncScheduler(cfg, backend=s.pop("backend", None))
+    return AsyncScheduler(
+        cfg, backend=s.pop("backend", None), prefetch=s.pop("prefetch", True)
+    )
 
 
 def make_run(scenario) -> FederationRuntime:

@@ -54,6 +54,24 @@ class ClientBatcher:
     def next_batch(self, client: int) -> dict:
         return self.ds.client_batch(client, self.batch_size, self.rngs[client])
 
+    def next_batches(self, clients: list[int], count: int) -> dict:
+        """Bulk draw: ``count`` batches per client, leaves (len(clients), count, b, ...).
+
+        One rng call per client and one fancy-index into the dataset replace
+        the ``len(clients) * count`` per-call Python loop; the draws are
+        stream-identical to calling ``next_batch`` sequentially (numpy fills
+        integer draws from the bit stream in C order), so bulk and per-call
+        consumers interleave safely.
+        """
+        idx = np.stack([
+            self.ds.parts[c][
+                self.rngs[c].integers(0, len(self.ds.parts[c]),
+                                      size=(count, self.batch_size))
+            ]
+            for c in clients
+        ])  # (len(clients), count, batch_size)
+        return {"x": self.ds.data.x[idx], "y": self.ds.data.y[idx]}
+
     def next_stacked(self, clients: list[int] | None = None) -> dict:
         clients = clients if clients is not None else list(range(self.ds.num_clients))
         xs, ys = [], []

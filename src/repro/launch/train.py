@@ -42,7 +42,8 @@ def run_scenario(args) -> None:
     for flag, key in (("clients", "num_clients"), ("clusters", "num_clusters"),
                       ("samples", "num_samples"), ("tau1", "tau1"),
                       ("tau2", "tau2"), ("alpha", "alpha"),
-                      ("lr", "learning_rate"), ("batch", "batch_size")):
+                      ("lr", "learning_rate"), ("batch", "batch_size"),
+                      ("rounds_per_step", "rounds_per_step")):
         value = getattr(args, flag)
         if value is not None:
             overrides[key] = value
@@ -77,6 +78,10 @@ def main(argv=None):
     ap.add_argument("--tau1", type=int, default=None, help="default 2 (LM path)")
     ap.add_argument("--tau2", type=int, default=None, help="default 1 (LM path)")
     ap.add_argument("--alpha", type=int, default=None, help="default 2 (LM path)")
+    ap.add_argument("--rounds-per-step", dest="rounds_per_step", type=int,
+                    default=None,
+                    help="round scheduler only: full rounds fused into one "
+                         "compiled superstep dispatch (default 1)")
     ap.add_argument("--lr", type=float, default=None, help="default 0.05 (LM path)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "dense", "pallas", "collective"],
@@ -93,7 +98,8 @@ def main(argv=None):
     if args.scenario is not None:
         return run_scenario(args)
     for flag, default in (("clients", 8), ("clusters", 4), ("tau1", 2),
-                          ("tau2", 1), ("alpha", 2), ("lr", 0.05), ("batch", 4)):
+                          ("tau2", 1), ("alpha", 2), ("lr", 0.05), ("batch", 4),
+                          ("rounds_per_step", 1)):
         if getattr(args, flag) is None:
             setattr(args, flag, default)
 
@@ -112,10 +118,14 @@ def main(argv=None):
         "learning_rate": args.lr,
         "seed": args.seed,
         "backend": args.backend,
+        "rounds_per_step": args.rounds_per_step,
     })
     sched = runtime.scheduler
     ipr = sched.iterations_per_round
-    rounds = sched.rounds_for(args.steps)
+    rps = sched.rounds_per_step
+    steps = sched.steps_for(args.steps)
+    # whole supersteps only: the trained-round count rounds up to R-multiples
+    rounds = steps * rps
 
     start_round = 0
     if args.save_dir and args.resume:
@@ -138,10 +148,16 @@ def main(argv=None):
             if start_round >= rounds:
                 print(f"checkpoint already at round {start_round} >= target "
                       f"{rounds}; nothing to train")
+    start_step = -(-start_round // rps)
+    if start_round % rps:
+        print(f"WARNING: checkpoint round {start_round} does not align with "
+              f"--rounds-per-step {rps}; resuming from superstep {start_step} "
+              f"(rounds {start_round + 1}..{start_step * rps} are skipped)")
     n_params = sum(p.size for p in jax.tree.leaves(sched.params)) // args.clients
     print(f"arch={cfg.name} params/client={n_params:,} clients={args.clients} "
           f"clusters={args.clusters} tau1={args.tau1} tau2={args.tau2} "
-          f"alpha={args.alpha} rounds={rounds} ({rounds * ipr} iterations)")
+          f"alpha={args.alpha} rounds={rounds} ({rounds * ipr} iterations, "
+          f"{steps} dispatches of {rps} round(s))")
 
     # per-client non-IID-ish token streams (different seeds = different stats)
     streams = [
@@ -154,12 +170,15 @@ def main(argv=None):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
 
     t0 = time.time()
-    for r in range(start_round + 1, rounds + 1):
+    for s in range(start_step + 1, steps + 1):
         ev = runtime.step(batch_fn)
-        if r % args.log_every == 0 or r == rounds or r == start_round + 1:
+        r = s * rps  # rounds completed
+        # float(ev.losses[...]) is the only device sync in the loop — keep it
+        # off the non-logging steps so supersteps dispatch back-to-back
+        if r % args.log_every == 0 or s == steps or s == start_step + 1:
             print(f"round {r:4d} (iter {r * ipr:5d}) "
                   f"loss={float(ev.losses[-1]):.4f} ({time.time() - t0:.1f}s)")
-        if args.save_dir and (r % args.save_every == 0 or r == rounds):
+        if args.save_dir and (r % args.save_every == 0 or s == steps):
             from repro.checkpoint import save_checkpoint
             save_checkpoint(args.save_dir, sched.params, step=r,
                             metadata={"arch": cfg.name, "unit": "round"})

@@ -57,6 +57,7 @@ class Scenario:
     tau1: int = 5
     tau2: int = 1
     alpha: int = 1
+    rounds_per_step: int = 1            # round only: rounds fused per dispatch
     learning_rate: float = 0.05
     psi: str = "staleness"              # async only
     min_batches: int = 2                # async only
@@ -140,7 +141,8 @@ class Scenario:
         if self.scheduler == "round":
             # the compiled round engine lays clients out uniformly itself
             cfg.update(num_clients=c, num_clusters=d,
-                       tau1=self.tau1, tau2=self.tau2, alpha=self.alpha)
+                       tau1=self.tau1, tau2=self.tau2, alpha=self.alpha,
+                       rounds_per_step=self.rounds_per_step)
         else:
             assign = tuple(i * d // c for i in range(c))
             cfg["clusters"] = ClusterSpec(c, assign, ds.data_sizes())
@@ -264,6 +266,14 @@ register_scenario(Scenario(
     description="Whole-round scan-compiled SPMD path on IID data (uniform clusters).",
     scheduler="round", partition="iid", tau1=2, tau2=2, alpha=2,
     num_clients=8,
+))
+
+register_scenario(Scenario(
+    name="round-superstep-ring",
+    description="Device-resident superstep path: 4 scan-fused rounds per XLA "
+                "dispatch with batch prefetch (throughput lane).",
+    scheduler="round", partition="iid", tau1=2, tau2=2, alpha=2,
+    num_clients=8, rounds_per_step=4,
 ))
 
 register_scenario(Scenario(

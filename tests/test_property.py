@@ -211,3 +211,59 @@ def test_partition_sizes_and_disjoint(data):
     idx = np.concatenate(parts)
     assert len(np.unique(idx)) == len(idx)
     assert all(len(p) >= 1 for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# BatchPipeline: prefetch must be an order-preserving, exhaustion-exact view
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_batch_pipeline_yields_exact_producer_sequence(data):
+    """For any (length, depth, start), the pipeline yields the producer's
+    batches in order and raises StopIteration exactly past the last one."""
+    from repro.core.pipeline import BatchPipeline
+
+    n = data.draw(st.integers(0, 12))
+    depth = data.draw(st.integers(1, 5))
+    start = data.draw(st.integers(1, 4))
+    calls = []
+
+    def producer(k):
+        if k >= start + n:
+            raise StopIteration
+        calls.append(k)
+        return {"v": np.array([k], np.int64)}
+
+    pipe = BatchPipeline(producer, start=start, depth=depth)
+    for k in range(start, start + n):
+        assert int(pipe.get(k)["v"][0]) == k
+    # ordered, gap-free production; lookahead never exceeds depth
+    assert calls == list(range(start, start + n))
+    try:
+        pipe.get(start + n)
+        raised = False
+    except StopIteration:
+        raised = True
+    assert raised and pipe.exhausted
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_batch_pipeline_lookahead_bounded(data):
+    """At any point the producer has been asked for at most depth batches
+    beyond what get() consumed."""
+    from repro.core.pipeline import BatchPipeline
+
+    n = data.draw(st.integers(1, 10))
+    depth = data.draw(st.integers(1, 4))
+    calls = []
+
+    def producer(k):
+        calls.append(k)
+        return np.array([k])
+
+    pipe = BatchPipeline(producer, start=1, depth=depth)
+    for k in range(1, n + 1):
+        assert max(calls) - (k - 1) <= depth
+        pipe.get(k)

@@ -228,6 +228,177 @@ def test_async_shim_matches_runtime(fed_data):
 
 
 # ---------------------------------------------------------------------------
+# Device-resident superstep: rounds_per_step equivalence + donation safety
+# ---------------------------------------------------------------------------
+
+def test_round_superstep_bitwise_matches_sequential_rounds(fed_data):
+    """rounds_per_step=R is bit-identical to R per-round dispatches (CPU)."""
+    ds, _ = fed_data
+    rng = np.random.default_rng(11)
+    batches = [ds.stacked_batch(4, rng) for _ in range(12)]  # 3 rounds, ipr=4
+    base = {"scheduler": "round", "model": MnistCNN(), "num_clients": 8,
+            "num_clusters": 4, "tau1": 2, "tau2": 2, "alpha": 2,
+            "learning_rate": 0.05, "seed": 1}
+    src = lambda k: batches[k - 1]  # noqa: E731
+
+    rt_seq = make_run(dict(base))
+    losses_seq = []
+    for _ in range(3):
+        losses_seq.extend(np.asarray(rt_seq.step(src).losses).tolist())
+
+    rt_super = make_run(dict(base, rounds_per_step=3))
+    ev = rt_super.step(src)
+    assert ev.kind == "round"
+    assert ev.iteration == 12 == rt_seq.iteration
+    assert np.asarray(ev.losses).tolist() == losses_seq
+    for a, b in zip(jax.tree.leaves(rt_seq.scheduler.params),
+                    jax.tree.leaves(rt_super.scheduler.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_superstep_clock_and_steps_accounting():
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=3, tau2=2, alpha=2,
+                learning_rate=0.05)
+    runtime = make_run({
+        "scheduler": "round", "model": MnistCNN(), "fl": fl,
+        "latency": MNIST_LATENCY, "rounds_per_step": 4, "seed": 0,
+    })
+    sched = runtime.scheduler
+    assert sched.iterations_per_step == 4 * 6
+    assert sched.rounds_for(25) == 5      # whole rounds, unchanged semantics
+    assert sched.steps_for(25) == 2       # two superstep dispatches cover 5 rounds
+    rng = np.random.default_rng(0)
+    from repro.data import FederatedDataset, iid_partition, mnist_like
+    data = mnist_like(300, seed=0)
+    train, _ = data.split(0.9)
+    ds = FederatedDataset(train, iid_partition(train.y, 8))
+    ev = runtime.step(lambda k: ds.stacked_batch(4, rng))
+    # one step == 4 rounds of iterations and 4 rounds of §V-B wall-clock
+    assert ev.iteration == 4 * 6
+    assert np.isclose(ev.dt, 4 * sched.round_time())
+
+
+def test_step_losses_stay_on_device_and_materialize_later(fed_data):
+    """Non-blocking metrics: losses are device arrays, still valid after
+    later (donating) steps have retired the params they came from."""
+    ds, _ = fed_data
+    rng = np.random.default_rng(5)
+    runtime = make_run({
+        "scheduler": "round", "model": MnistCNN(), "num_clients": 8,
+        "num_clusters": 4, "tau1": 2, "tau2": 1, "alpha": 1,
+        "learning_rate": 0.05, "seed": 0,
+    })
+    src = lambda k: ds.stacked_batch(4, rng)  # noqa: E731
+    ev1 = runtime.step(src)
+    assert isinstance(ev1.losses, jax.Array)
+    ev2 = runtime.step(src)
+    # materializing the *old* event's losses after two further donated steps
+    # must not hit a deleted buffer
+    vals = np.asarray(ev1.losses)
+    assert vals.shape == (2,) and np.isfinite(vals).all()
+    assert np.isfinite(np.asarray(ev2.losses)).all()
+
+
+@pytest.mark.parametrize("scenario", [
+    {"scheduler": "sync", "topology": "ring", "tau1": 2, "tau2": 2, "alpha": 1,
+     "learning_rate": 0.05},
+    {"scheduler": "round", "num_clients": 8, "num_clusters": 4, "tau1": 2,
+     "tau2": 1, "alpha": 1, "learning_rate": 0.05, "rounds_per_step": 2},
+    {"scheduler": "async", "topology": "ring", "learning_rate": 0.05,
+     "min_batches": 2, "theta_max": 4, "heterogeneity": 3.0},
+])
+def test_donation_safety_across_schedulers(fed_data, scenario):
+    """No use-after-donate: stepping interleaved with global_params/evaluate
+    reads works on every scheduler, and state stays finite."""
+    ds, eval_batch = fed_data
+    s = dict(scenario)
+    if s["scheduler"] in ("sync", "async"):
+        s["clusters"] = _cluster_spec(ds)
+    runtime = make_run({"model": MnistCNN(), "seed": 0, **s})
+    if s["scheduler"] == "async":
+        source = ClientBatcher(ds, 4, seed=0)
+    else:
+        rng = np.random.default_rng(2)
+        source = lambda k: ds.stacked_batch(4, rng)  # noqa: E731
+    for _ in range(3):
+        runtime.step(source)
+        loss, acc = runtime.evaluate(eval_batch)  # reads params between donations
+        assert np.isfinite(loss) and np.isfinite(acc)
+    g = runtime.global_params()
+    assert all(np.isfinite(np.asarray(p)).all() for p in jax.tree.leaves(g))
+
+
+def test_sync_prefetch_off_matches_prefetch_on(fed_data):
+    """The pipeline is numerically invisible: prefetch on/off give identical
+    trajectories for an indexed batch source."""
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    rng = np.random.default_rng(9)
+    batches = [ds.stacked_batch(4, rng) for _ in range(6)]
+    runs = {}
+    for prefetch in (False, True):
+        runtime = make_run({
+            "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
+            "topology": "ring", "tau1": 2, "tau2": 1, "alpha": 1,
+            "learning_rate": 0.05, "seed": 0, "prefetch": prefetch,
+        })
+        for k in range(1, 7):
+            runtime.step(lambda kk: batches[kk - 1])
+        runs[prefetch] = jax.tree.leaves(runtime.scheduler.params)
+    for a, b in zip(runs[False], runs[True]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_prefetch_and_bulk_gather_match_legacy_path(fed_data):
+    """Bulk next_batches + event prefetch produce the same federation as the
+    per-call, non-prefetched path."""
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    speeds = make_speeds(8, 4.0, seed=2)
+
+    class PerCallOnly:
+        def __init__(self, batcher):
+            self._b = batcher
+
+        def next_batch(self, client):
+            return self._b.next_batch(client)
+
+    outs = {}
+    for key, prefetch, wrap in (
+        ("fast", True, lambda b: b),
+        ("legacy", False, PerCallOnly),
+    ):
+        runtime = make_run({
+            "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+            "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
+            "min_batches": 2, "theta_max": 6, "seed": 0, "prefetch": prefetch,
+        })
+        source = wrap(ClientBatcher(ds, 4, seed=0))
+        for _ in range(8):
+            runtime.step(source)
+        outs[key] = jax.tree.leaves(runtime.scheduler.y)
+    for a, b in zip(outs["fast"], outs["legacy"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_evaluate_fused_matches_separate_eval(fed_data):
+    ds, eval_batch = fed_data
+    runtime = make_run({
+        "scheduler": "sync", "model": MnistCNN(), "clusters": _cluster_spec(ds),
+        "topology": "ring", "tau1": 2, "tau2": 1, "alpha": 1,
+        "learning_rate": 0.05, "seed": 0,
+    })
+    rng = np.random.default_rng(1)
+    runtime.step(lambda k: ds.stacked_batch(4, rng))
+    loss, acc = runtime.evaluate(eval_batch)
+    model = runtime.model
+    g = runtime.global_params()
+    b = jax.tree.map(jnp.asarray, eval_batch)
+    np.testing.assert_allclose(loss, float(model.loss(g, b)), rtol=1e-6)
+    np.testing.assert_allclose(acc, float(model.accuracy(g, b)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Scenario registry
 # ---------------------------------------------------------------------------
 
