@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ClusterSpec, CIFAR_LATENCY, HierFAVGTrainer, SDFEELConfig, SDFEELSimulator, ring
+from repro.core import ClusterSpec, CIFAR_LATENCY, HierFAVGTrainer, make_run, ring
 from repro.data import FederatedDataset, cifar_like, dirichlet_partition
 from repro.models import CifarCNN
 
@@ -28,9 +28,11 @@ def main():
     spec = ClusterSpec(ds.num_clients,
                        tuple(i * N_CLUSTERS // ds.num_clients for i in range(ds.num_clients)),
                        ds.data_sizes())
-    cfg = SDFEELConfig(clusters=spec, topology=ring(N_CLUSTERS), tau1=2, tau2=1,
-                       alpha=2, learning_rate=0.01)
-    sd = SDFEELSimulator(CifarCNN(), cfg, latency=CIFAR_LATENCY, seed=8)
+    sd = make_run({
+        "scheduler": "sync", "model": CifarCNN(), "clusters": spec,
+        "topology": ring(N_CLUSTERS), "tau1": 2, "tau2": 1, "alpha": 2,
+        "learning_rate": 0.01, "latency": CIFAR_LATENCY, "seed": 8,
+    })
     h_sd = sd.run(iters, batch_fn, eval_batch, eval_every=iters)
     emit("cifar", "sdfeel", iters, "final_loss", h_sd.loss[-1])
     emit("cifar", "sdfeel", iters, "total_time", h_sd.wallclock[-1])

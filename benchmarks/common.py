@@ -90,3 +90,11 @@ def run_history(sim_or_trainer, ds, iters=None, seed=0, eval_batch=None, eval_ev
 def timer():
     t0 = time.time()
     return lambda: time.time() - t0
+
+
+def time_to_target(hist, target_loss: float) -> float:
+    """First simulated wall-clock at which ``hist`` reaches ``target_loss``."""
+    for t, loss in zip(hist.wallclock, hist.loss):
+        if loss <= target_loss:
+            return float(t)
+    return float("inf")

@@ -1,0 +1,146 @@
+"""Partial-participation lane: sampled-k vs full aggregation wall-clock.
+
+Runs the paper's §V-A label-skew MNIST setting under the bimodal-straggler
+fleet twice through the sync scheduler:
+
+* ``full``      — every client aggregates every round; each iteration is
+                  paced by the slowest effective device and the narrowest
+                  uplink (the straggler effect);
+* ``sampled-k`` — FedAvg-style ``uniform-k`` participation: ``k`` clients
+                  per cluster per round, aggregation weights masked and
+                  renormalized by the ``ParticipationPlan``, and — the
+                  wall-clock upside — each round paced only by the clients
+                  actually in it, so a round that misses every straggler
+                  runs at fast-device speed.
+
+The headline is wall-clock-to-target-loss (the straggler_wallclock
+methodology: the target sits 5% above the worst regime's best loss, so both
+regimes demonstrably cross it) plus the mean per-iteration wall-clock
+ratio, which is deterministically <= 1 for sampled-k — restricting pacing
+to a subset can only drop the stragglers.  Results land in
+``results/BENCH_participation.json`` (schema asserted by the CI smoke
+step).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.participation            # full lane
+    PYTHONPATH=src python -m benchmarks.participation --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.scenarios import get_scenario
+
+from .common import RESULTS, ensure_results, time_to_target, timer
+
+JSON_PATH = os.path.join(RESULTS, "BENCH_participation.json")
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+
+# required keys of one regime row / of the headline block (CI asserts these)
+ROW_KEYS = ("participation", "k", "iters", "wallclock_per_iter",
+            "time_to_target", "final_loss")
+HEADLINE_KEYS = ("target_loss", "full_time", "sampled_time", "speedup",
+                 "wallclock_per_iter_ratio")
+
+SAMPLED_K = 2
+FLEET = {"kind": "bimodal-straggler", "straggler_frac": 0.25, "speedup": 10.0}
+
+
+def main(smoke: bool = False) -> dict:
+    ensure_results()
+    elapsed = timer()
+    if smoke:
+        # cluster size must exceed SAMPLED_K or sampling degenerates to full
+        n_clients, n_clusters, n_samples, iters = 16, 4, 800, 32
+    elif FULL:
+        n_clients, n_clusters, n_samples, iters = 40, 8, 6000, 240
+    else:
+        n_clients, n_clusters, n_samples, iters = 16, 4, 2000, 96
+    seed = 0
+    overrides = dict(seed=seed, num_clients=n_clients, num_clusters=n_clusters,
+                     num_samples=n_samples, profile=FLEET, tau1=2)
+
+    regimes = {
+        "full": dict(overrides),
+        "sampled-k": dict(overrides,
+                          participation={"strategy": "uniform-k",
+                                         "k": SAMPLED_K}),
+    }
+    hists = {}
+    for name, ov in regimes.items():
+        run = get_scenario("mnist-noniid-ring").build(**ov)
+        hists[name] = run.run(iters, eval_every=max(2, iters // 16))
+
+    # target 5% above the worst regime's best loss: both demonstrably cross
+    target = 1.05 * max(min(h.loss) for h in hists.values())
+    times = {k: time_to_target(h, target) for k, h in hists.items()}
+    per_iter = {
+        k: h.wallclock[-1] / h.iterations[-1] for k, h in hists.items()
+    }
+    speedup = (times["full"] / times["sampled-k"]
+               if times["sampled-k"] > 0 else float("inf"))
+    ratio = per_iter["sampled-k"] / per_iter["full"]
+
+    rows = [
+        {
+            "participation": name,
+            "k": SAMPLED_K if name == "sampled-k" else n_clients // n_clusters,
+            "iters": int(hists[name].iterations[-1]),
+            "wallclock_per_iter": per_iter[name],
+            "time_to_target": times[name],
+            "final_loss": float(hists[name].loss[-1]),
+        }
+        for name in regimes
+    ]
+    payload = {
+        "config": {
+            "fleet": FLEET, "num_clients": n_clients,
+            "num_clusters": n_clusters, "num_samples": n_samples,
+            "iters": iters, "sampled_k": SAMPLED_K, "seed": seed,
+            "smoke": smoke, "full": FULL,
+        },
+        "rows": rows,
+        "headline": {
+            "target_loss": target,
+            "full_time": times["full"],
+            "sampled_time": times["sampled-k"],
+            "speedup": speedup,
+            "wallclock_per_iter_ratio": ratio,
+        },
+        "bench_seconds": elapsed(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {JSON_PATH}")
+    for r in rows:
+        print(f"  {r['participation']:10s} k={r['k']} "
+              f"per-iter={r['wallclock_per_iter']:8.2f}s "
+              f"time_to_target={r['time_to_target']:10.1f}s "
+              f"final_loss={r['final_loss']:.4f}")
+
+    # masked pacing can only drop stragglers, never add them
+    assert ratio <= 1.0 + 1e-9, (
+        f"sampled-k per-iteration wall-clock exceeds full participation: "
+        f"{per_iter['sampled-k']:.2f}s vs {per_iter['full']:.2f}s"
+    )
+    assert all(t < float("inf") for t in times.values()), (
+        f"a regime never crossed the target loss: {times}"
+    )
+    return {
+        "target_loss": target,
+        "full_time": times["full"],
+        "sampled_time": times["sampled-k"],
+        "speedup": speedup,
+        "wallclock_per_iter_ratio": ratio,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for the CI schema/regression gate")
+    main(smoke=ap.parse_args().smoke)

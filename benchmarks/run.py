@@ -20,7 +20,8 @@ def main() -> None:
 
     from . import (
         agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
-        moe_ablation, roofline_report, straggler_wallclock, throughput,
+        moe_ablation, participation, roofline_report, straggler_wallclock,
+        throughput,
     )
 
     registry = {
@@ -35,6 +36,7 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "agg_backends": agg_backends.main,
         "straggler_wallclock": straggler_wallclock.main,
+        "participation": participation.main,
         "throughput": throughput.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,

@@ -9,7 +9,12 @@ three regimes built from the named scenario registry:
 * ``vanilla``   — asynchronous with staleness-*oblivious* constant mixing
                   (``straggler-bimodal-vanilla``);
 * ``staleness`` — the paper's staleness-aware async (psi = 1/(2(delta+1)),
-                  ``straggler-bimodal-async``).
+                  ``straggler-bimodal-async``);
+* ``sampled``   — synchronous with FedAvg-style ``uniform-k`` participation
+                  (2 clients per cluster per round): rounds that miss every
+                  straggler are paced by fast devices only, the third way to
+                  beat the straggler effect (see benchmarks/participation.py
+                  for the dedicated lane).
 
 All three report loss/accuracy against the *same simulated wall-clock*
 (§V-B units threaded through ``FleetTiming``), so the headline number is
@@ -23,7 +28,7 @@ import os
 
 from repro.scenarios import get_scenario
 
-from .common import RESULTS, ensure_results, timer
+from .common import RESULTS, ensure_results, time_to_target, timer
 
 JSON_PATH = os.path.join(RESULTS, "BENCH_straggler_wallclock.json")
 
@@ -45,13 +50,6 @@ def _history_rows(hist):
     }
 
 
-def _time_to(hist, target_loss: float) -> float:
-    for t, loss in zip(hist.wallclock, hist.loss):
-        if loss <= target_loss:
-            return float(t)
-    return float("inf")
-
-
 def main() -> dict:
     ensure_results()
     elapsed = timer()
@@ -69,6 +67,14 @@ def main() -> dict:
     )
     hists["sync"] = sync.run(SYNC_ITERS, eval_every=max(2, SYNC_ITERS // 20))
 
+    # Same fleet + schedule with uniform-k participation: sampling is the
+    # synchronous answer to stragglers (masked rounds pace by participants).
+    sampled = get_scenario("mnist-noniid-ring").build(
+        profile=fleet, tau1=2,
+        participation={"strategy": "uniform-k", "k": 2}, **overrides
+    )
+    hists["sampled"] = sampled.run(SYNC_ITERS, eval_every=max(2, SYNC_ITERS // 20))
+
     for key, name in (
         ("vanilla", "straggler-bimodal-vanilla"),
         ("staleness", "straggler-bimodal-async"),
@@ -80,7 +86,7 @@ def main() -> dict:
     # The target sits 5% above the *worst* regime's best loss, so every
     # regime demonstrably crosses it and the comparison is fair.
     target = 1.05 * max(min(h.loss) for h in hists.values())
-    times = {k: _time_to(h, target) for k, h in hists.items()}
+    times = {k: time_to_target(h, target) for k, h in hists.items()}
     speedup = times["sync"] / times["staleness"] if times["staleness"] > 0 else float("inf")
 
     payload = {
@@ -103,13 +109,23 @@ def main() -> dict:
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {JSON_PATH}")
-    for k in ("sync", "vanilla", "staleness"):
+    for k in ("sync", "sampled", "vanilla", "staleness"):
         print(f"  {k:10s} time_to_target={times[k]:10.1f}s "
               f"final_loss={hists[k].loss[-1]:.4f}")
 
     assert times["staleness"] < times["sync"], (
         f"staleness-aware async ({times['staleness']:.1f}s) should reach the "
         f"target loss before sync ({times['sync']:.1f}s) under stragglers"
+    )
+    # sampled rounds are paced by their participants: never slower per
+    # iteration than full-fleet sync on the same schedule
+    per_iter_sync = hists["sync"].wallclock[-1] / hists["sync"].iterations[-1]
+    per_iter_sampled = (
+        hists["sampled"].wallclock[-1] / hists["sampled"].iterations[-1]
+    )
+    assert per_iter_sampled <= per_iter_sync * (1 + 1e-9), (
+        f"uniform-k sampling slowed the simulated clock: "
+        f"{per_iter_sampled:.2f}s vs {per_iter_sync:.2f}s per iteration"
     )
     return {
         "target_loss": target,

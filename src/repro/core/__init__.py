@@ -13,8 +13,8 @@ from .runtime import (
     FederationRuntime, Scheduler, StepEvent, SyncScheduler, RoundScheduler,
     AsyncScheduler, TrainHistory, make_run, register_scheduler, stacked_init,
 )
-from .sdfeel import SDFEELSimulator, FLSpec, build_fl_train_step, init_stacked
-from .async_engine import AsyncConfig, AsyncSDFEEL, make_speeds
+from .sdfeel import FLSpec, build_fl_train_step, init_stacked
+from .async_engine import AsyncConfig, make_speeds
 from .baselines import FedAvgTrainer, HierFAVGTrainer, FEELTrainer
 from . import theory
 
@@ -32,8 +32,22 @@ __all__ = [
     "FederationRuntime", "Scheduler", "StepEvent", "SyncScheduler",
     "RoundScheduler", "AsyncScheduler", "make_run", "register_scheduler",
     "stacked_init",
-    "SDFEELSimulator", "FLSpec", "build_fl_train_step", "init_stacked", "TrainHistory",
-    "AsyncConfig", "AsyncSDFEEL", "make_speeds",
+    "FLSpec", "build_fl_train_step", "init_stacked", "TrainHistory",
+    "AsyncConfig", "make_speeds",
     "FedAvgTrainer", "HierFAVGTrainer", "FEELTrainer",
     "theory",
 ]
+
+_REMOVED_SHIMS = {
+    "SDFEELSimulator": "sync",
+    "AsyncSDFEEL": "async",
+}
+
+
+def __getattr__(name: str):
+    if name in _REMOVED_SHIMS:
+        raise ImportError(
+            f"{name} was removed; use repro.core.runtime.make_run("
+            f"{{'scheduler': '{_REMOVED_SHIMS[name]}', ...}}) instead"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,7 +1,8 @@
-"""Asynchronous SD-FEEL (Section IV) — config + deprecated engine shim.
+"""Asynchronous SD-FEEL (Section IV) — configuration.
 
-The event loop now lives in ``runtime.AsyncScheduler``; ``AsyncSDFEEL`` is a
-thin delegating wrapper kept for backwards compatibility.
+The event loop lives in ``runtime.AsyncScheduler``; the long-deprecated
+``AsyncSDFEEL`` shim has been removed (importing the old name raises
+``ImportError`` pointing at ``make_run``).
 
 TPU SPMD programs are lock-step, so device-level asynchrony is *simulated*
 (exactly as in the paper, which is simulation-only): each edge cluster is an
@@ -24,7 +25,6 @@ fires at global iteration ``t``:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import TYPE_CHECKING, Callable, Optional
 
 import numpy as np
@@ -37,7 +37,16 @@ from .topology import Topology
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (hetero -> core)
     from ..hetero import DeviceProfile
 
-__all__ = ["AsyncConfig", "AsyncSDFEEL", "make_speeds"]
+__all__ = ["AsyncConfig", "make_speeds"]
+
+
+def __getattr__(name: str):
+    if name == "AsyncSDFEEL":
+        raise ImportError(
+            "AsyncSDFEEL was removed; use repro.core.runtime.make_run("
+            "{'scheduler': 'async', ...}) instead"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def make_speeds(num_clients: int, heterogeneity: float, seed: int = 0) -> np.ndarray:
@@ -124,64 +133,3 @@ class AsyncConfig:
         return times
 
 
-class AsyncSDFEEL:
-    """Deprecated: use ``runtime.make_run({"scheduler": "async", ...})``.
-
-    Thin delegating wrapper over ``FederationRuntime(AsyncScheduler)`` that
-    preserves the historical API (``step(batcher) -> cluster``, ``t``,
-    ``last_update``, ``clock``, ``y``, ``run``)."""
-
-    def __init__(self, model, cfg: AsyncConfig, seed: int = 0):
-        from .runtime import AsyncScheduler, FederationRuntime
-
-        warnings.warn(
-            "AsyncSDFEEL is deprecated; use repro.core.runtime.make_run "
-            "with scheduler='async'",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        self.model = model
-        self.cfg = cfg
-        self.runtime = FederationRuntime(model, AsyncScheduler(cfg), seed=seed)
-
-    @property
-    def _sched(self):
-        return self.runtime.scheduler
-
-    @property
-    def theta(self) -> np.ndarray:
-        return self._sched.theta
-
-    @property
-    def iter_times(self) -> np.ndarray:
-        return self._sched.iter_times
-
-    @property
-    def t(self) -> int:
-        return self._sched.t
-
-    @property
-    def last_update(self) -> np.ndarray:
-        return self._sched.last_update
-
-    @property
-    def clock(self) -> float:
-        return self._sched.clock
-
-    @property
-    def y(self):
-        return self._sched.y
-
-    @y.setter
-    def y(self, value) -> None:
-        self._sched.y = value
-
-    def step(self, batcher) -> int:
-        """Process one cluster event; returns the triggering cluster index."""
-        return self.runtime.step(batcher).cluster
-
-    def global_params(self):
-        return self.runtime.global_params()
-
-    def run(self, num_events: int, batcher, eval_batch=None, eval_every: int = 20):
-        return self.runtime.run(num_events, batcher, eval_batch, eval_every)

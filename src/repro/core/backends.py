@@ -14,7 +14,16 @@ The interface (``C`` clients, ``D`` clusters)::
 
     intra_cluster(stacked, weights)  (C, ...) -> (D, ...)   eq. 2-3 reduce
     inter_cluster(y, p, alpha)       (D, ...) -> (D, ...)   eq. 4 / eq. 21-22 mixing
-    transition(stacked, event)       (C, ...) -> (C, ...)   full Lemma-1 T_k
+    transition(stacked, event,       (C, ...) -> (C, ...)   full Lemma-1 T_k
+               weights=None)
+
+``transition``'s optional ``weights`` is a *traced* per-call (C,) vector of
+intra-cluster client weights — the participation axis: a
+``ParticipationPlan`` masks and renormalizes ``m^`` per round and threads
+the result through here, so changing who participates changes array
+*values*, never the compiled program.  ``weights=None`` uses the weights
+bound at construction (the full-participation fast path, bit-identical to
+the pre-participation code).
 
 Registered implementations:
 
@@ -90,7 +99,10 @@ class AggregationBackend(Protocol):
 
     def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int) -> PyTree: ...
 
-    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree: ...
+    def transition(
+        self, stacked: PyTree, event: AggregationEvent,
+        weights: Optional[jax.Array] = None,
+    ) -> PyTree: ...
 
 
 def _uniform_contiguous(clusters: ClusterSpec) -> bool:
@@ -130,6 +142,14 @@ class DenseBackend:
         }
         # B indicator (C, D) for weight-parametrized intra reduce
         self._b_ind = jnp.asarray(clusters.B().T, jnp.float32)
+        # right factors of the weighted transition T(w) = V(w) @ M_event:
+        # M_intra = B, M_inter = P^alpha B (tiny (D, C), f64 on the host)
+        b = clusters.B()
+        p_a = np.linalg.matrix_power(np.asarray(p, np.float64), alpha)
+        self._m_event = {
+            "intra": jnp.asarray(b, jnp.float32),
+            "inter": jnp.asarray(p_a @ b, jnp.float32),
+        }
 
         @jax.jit
         def _intra(stacked, weights):
@@ -142,6 +162,16 @@ class DenseBackend:
             )
 
         self._intra = _intra
+
+        @jax.jit
+        def _apply_weighted(stacked, weights, m_event):
+            # T(w)[i, j] = w_i * M_event[d(i), j]: the (C, D) one-hot rows of
+            # B^T make the (C, D) @ (D, C) product exact per entry, so a full
+            # mask (w == m^) reproduces the static T bit-for-bit
+            v = self._b_ind * weights.astype(jnp.float32)[:, None]   # (C, D)
+            return apply_transition_dense(stacked, v @ m_event)
+
+        self._apply_weighted = _apply_weighted
 
         # matrix_power on the tiny (D, D) P, then ONE tree sweep — not alpha
         # full HBM passes over the model
@@ -156,10 +186,13 @@ class DenseBackend:
     def inter_cluster(self, y: PyTree, p: jax.Array, alpha: int = 1) -> PyTree:
         return self._inter(y, jnp.asarray(p), alpha=alpha)
 
-    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+    def transition(self, stacked: PyTree, event: AggregationEvent,
+                   weights: Optional[jax.Array] = None) -> PyTree:
         if event == "local":
             return stacked
-        return self._apply(stacked, self._t[event])
+        if weights is None:
+            return self._apply(stacked, self._t[event])
+        return self._apply_weighted(stacked, weights, self._m_event[event])
 
 
 def _t_matrix(clusters: ClusterSpec, p: np.ndarray, alpha: int,
@@ -215,7 +248,8 @@ class PallasBackend:
             interpret=self.interpret, tile_m=self.tile_m,
         )
 
-    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+    def transition(self, stacked: PyTree, event: AggregationEvent,
+                   weights: Optional[jax.Array] = None) -> PyTree:
         from repro.kernels import fused_transition_tree
 
         if event == "local":
@@ -223,8 +257,15 @@ class PallasBackend:
         # alpha=0 skips the mixing stage: V B.  The (D, M) intermediate stays
         # in VMEM either way.
         alpha = self.alpha if event == "inter" else 0
+        if weights is None:
+            vt = self._vt
+        else:
+            # V(w)^T: the per-round weights replace m^ in the upload factor;
+            # bt.T is the exact 0/1 indicator, so vt rows carry w verbatim
+            # and the same fused kernel serves every participation draw
+            vt = self._bt.T * weights.astype(jnp.float32)[None, :]
         return fused_transition_tree(
-            stacked, self._vt, self._p, self._bt, alpha=alpha,
+            stacked, vt, self._p, self._bt, alpha=alpha,
             interpret=self.interpret, tile_m=self.tile_m,
         )
 
@@ -298,20 +339,27 @@ class CollectiveBackend:
         self._m_hat = jnp.asarray(clusters.m_hat(), jnp.float32)
 
     # -- full Lemma-1 transition, (C, ...) -> (C, ...) -----------------------
-    def transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+    def transition(self, stacked: PyTree, event: AggregationEvent,
+                   weights: Optional[jax.Array] = None) -> PyTree:
         if event == "local":
             return stacked
         wl, ws, wr = self._ring_w
         c = self.clusters.num_clients
+        # the per-client weight is already a traced operand of the weighted
+        # all-reduce; participation just substitutes the round's vector
+        m_hat = self._m_hat if weights is None else jnp.asarray(
+            weights, jnp.float32
+        )
         if self.mesh is not None:
-            return self._shard_map_transition(stacked, event)
+            return self._shard_map_transition(stacked, event, m_hat)
         return _vmapped_transition(
-            stacked, self._m_hat, wl, ws, wr,
+            stacked, m_hat, wl, ws, wr,
             axis_name=self.axis_name, axis_size=c,
             cluster_size=self.cluster_size, alpha=self.alpha, event=event,
         )
 
-    def _shard_map_transition(self, stacked: PyTree, event: AggregationEvent) -> PyTree:
+    def _shard_map_transition(self, stacked: PyTree, event: AggregationEvent,
+                              m_hat: jax.Array) -> PyTree:
         from repro.sharding.compat import shard_map_compat
 
         if self.param_specs is None:
@@ -335,7 +383,7 @@ class CollectiveBackend:
         return shard_map_compat(
             agg, mesh=self.mesh,
             in_specs=(self.param_specs, w_spec), out_specs=self.param_specs,
-        )(stacked, self._m_hat)
+        )(stacked, m_hat)
 
     # -- factors -------------------------------------------------------------
     def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree:

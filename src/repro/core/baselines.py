@@ -23,7 +23,7 @@ import numpy as np
 from .aggregation import apply_transition_dense
 from .latency import LatencyModel
 from .protocol import ClusterSpec
-from .sdfeel import TrainHistory
+from .runtime import TrainHistory
 
 __all__ = ["FedAvgTrainer", "HierFAVGTrainer", "FEELTrainer"]
 

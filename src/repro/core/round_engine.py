@@ -24,12 +24,21 @@ The batch input grows a matching leading dimension
 (``R * tau1 * tau2``, C, b, ...) and the semantics are bit-identical to
 stepping the ``R = 1`` program ``R`` times (tests/test_runtime.py).
 
+With ``participation=True`` the step gains a fourth operand: a stacked
+``(rounds_per_step, C)`` array of per-round intra-cluster weights (one
+masked-and-renormalized ``ParticipationPlan`` vector per round), consumed by
+the outer scan alongside each round's batches and threaded into every
+transition of that round.  The weights are a *traced* input — changing the
+drawn subset (or ``k``) changes values only, never the compiled program —
+and passing each round's full-participation ``m^`` vector reproduces the
+``participation=False`` trajectory (tests/test_participation.py).
+
 The training driver for this engine is ``runtime.RoundScheduler`` — this
 module only builds the compiled round step.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 
@@ -42,14 +51,17 @@ __all__ = ["build_fl_round_step"]
 
 
 def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
-                        rounds_per_step: int = 1):
-    """Returns round_step(params, opt_state, batches) -> (params, opt_state, losses).
+                        rounds_per_step: int = 1, participation: bool = False):
+    """Returns round_step(params, opt_state, batches[, weights]) ->
+    (params, opt_state, losses).
 
     ``batches`` leaves: (rounds_per_step * tau1 * tau2, C, per_client_batch,
     ...); ``losses``: (rounds_per_step * tau1 * tau2,) mean loss per
     iteration.  ``backend`` is any ``AggregationBackend`` (default: dense
     Lemma-1 einsum); its traced ``transition`` is inlined into the compiled
-    round(s).
+    round(s).  With ``participation=True`` the step takes an extra
+    ``weights`` operand of shape (rounds_per_step, C): round ``r``'s weight
+    vector is applied to every intra/inter transition of that round.
     """
     from .backends import resolve_backend
 
@@ -70,22 +82,27 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
         params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
         return (params, opt_state), loss.mean()
 
-    def segment(carry, seg_batches):
-        # tau1 local iterations then one intra-cluster aggregation
-        (params, opt_state), losses = jax.lax.scan(local_iter, carry, seg_batches)
-        params = backend.transition(params, "intra")
-        return (params, opt_state), losses
-
-    def one_round(carry, batches):
-        # batches leaves: (tau1 * tau2, C, b, ...) — exactly one round's worth
+    def one_round(carry, batches, w=None):
+        # batches leaves: (tau1 * tau2, C, b, ...) — exactly one round's worth;
+        # ``w`` is that round's participation weight vector (None == the
+        # backend's bound m^, the full-participation fast path)
         seg = jax.tree.map(
             lambda x: x.reshape((tau2, tau1) + x.shape[1:]), batches
         )
+
+        def segment(c, seg_batches):
+            # tau1 local iterations then one intra-cluster aggregation
+            (params, opt_state), losses = jax.lax.scan(local_iter, c, seg_batches)
+            params = backend.transition(params, "intra", weights=w)
+            return (params, opt_state), losses
+
         (params, opt_state), losses = jax.lax.scan(segment, carry, seg)
         # The last segment applied T_intra = V B; composing with
         # T_inter = V P^a B is exact because B V = I_D (each cluster's
         # aggregate re-aggregates to itself): T_intra @ T_inter = T_inter.
-        params = backend.transition(params, "inter")
+        # Under participation both factors use the same per-round weights, so
+        # the composition stays exact round by round.
+        params = backend.transition(params, "inter", weights=w)
         return (params, opt_state), losses.reshape(tau1 * tau2)
 
     ipr = tau1 * tau2
@@ -103,4 +120,28 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
         )
         return params, opt_state, losses.reshape(rounds_per_step * ipr)
 
+    def round_step_p(params, opt_state, batches, weights):
+        # weights: (1, C) — same signature as the superstep for one round
+        (params, opt_state), losses = one_round(
+            (params, opt_state), batches, weights[0]
+        )
+        return params, opt_state, losses
+
+    def superstep_p(params, opt_state, batches, weights):
+        # weights: (rounds_per_step, C), scanned in step with each round
+        rounds = jax.tree.map(
+            lambda x: x.reshape((rounds_per_step, ipr) + x.shape[1:]), batches
+        )
+
+        def body(carry, xs):
+            round_batches, w = xs
+            return one_round(carry, round_batches, w)
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (rounds, weights)
+        )
+        return params, opt_state, losses.reshape(rounds_per_step * ipr)
+
+    if participation:
+        return round_step_p if rounds_per_step == 1 else superstep_p
     return round_step if rounds_per_step == 1 else superstep

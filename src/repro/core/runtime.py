@@ -54,13 +54,22 @@ per-step metrics stay on device until a logging or eval boundary, so the
 host never serializes the dispatch pipeline (``benchmarks/throughput.py``
 tracks the resulting protocol-iterations/sec).
 
+Every scheduler also understands the *participation* axis (scenario key
+``"participation"``, see ``repro.participation``): a ``ParticipationPlan``
+produces per-round masks + renormalized intra-cluster weights that enter
+each compiled step as a traced array — who participates changes values, not
+programs.  ``"full"`` (or no plan) routes through the legacy static-weight
+path and is bit-identical to a plan-free run; sampled-out clients'
+updates are dropped (weight exactly 0), and the async scheduler skips a
+cluster event outright when none of its members participate.
+
 New regimes (e.g. the semi-async deadline sampling of arXiv:2104.12678)
 plug in via ``register_scheduler`` and become available to the config-driven
 scenario factory ``make_run`` without touching the runtime — and, because
 aggregation goes through the backend layer, they inherit every fast path.
 
-The legacy entry points (``SDFEELSimulator``, ``AsyncSDFEEL``) remain as
-deprecated shims delegating here.
+The legacy entry points (``SDFEELSimulator``, ``AsyncSDFEEL``) have been
+removed; importing them raises ``ImportError`` pointing here.
 """
 from __future__ import annotations
 
@@ -116,7 +125,8 @@ class StepEvent:
 
     ``kind`` is the aggregation event ("local"/"intra"/"inter" for the sync
     path, "round" for a compiled round, "cluster" for an async cluster
-    firing).  ``iteration`` is the protocol-iteration count after the step,
+    firing, "skipped" for an async event none of whose clients participated).
+    ``iteration`` is the protocol-iteration count after the step,
     ``dt`` the Section V-B wall-clock the step consumed.
 
     ``losses`` (round steps) is left as a *device* array so emitting a step
@@ -145,17 +155,22 @@ def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
 
 
 def _event_time(
-    latency: Optional[LatencyModel], alpha: int, event: str, profile=None
+    latency: Optional[LatencyModel], alpha: int, event: str, profile=None,
+    participants=None,
 ) -> float:
     """Per-iteration wall-clock of Section V-B for one sync protocol event.
 
     With a ``DeviceProfile``, synchronous pacing is set by the slowest
-    effective client and the narrowest uplink (the straggler effect).
+    effective client and the narrowest uplink (the straggler effect);
+    ``participants`` (a round's participation mask) restricts pacing to the
+    clients actually in the round — sampling's wall-clock upside.
     """
     if profile is not None:
         from ..hetero import FleetTiming
 
-        return FleetTiming(profile, latency).sync_event_time(event, alpha)
+        return FleetTiming(profile, latency).sync_event_time(
+            event, alpha, participants=participants
+        )
     if latency is None:
         return 0.0
     t = latency.t_comp()
@@ -221,20 +236,31 @@ class SyncScheduler:
     :class:`~repro.core.pipeline.BatchPipeline`, overlapping host batch prep
     with the in-flight device step (``prefetch=False`` restores the
     host-synchronous seed behavior — only useful as a benchmark baseline).
+
+    ``participation`` (a ``repro.participation`` spec/plan) samples who
+    aggregates each round (one round = ``tau1 * tau2`` iterations): the
+    round's renormalized weight vector enters the fused step as a traced
+    operand, and — with a ``DeviceProfile`` — the round's wall-clock is
+    paced by its *participants* only.  ``None``/``"full"`` keeps the exact
+    legacy code path.
     """
 
     name = "sync"
 
     def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
-                 backend=None, profile=None, prefetch: bool = True):
+                 backend=None, profile=None, prefetch: bool = True,
+                 participation=None):
         self.cfg = cfg
         self.latency = latency
         self.profile = profile
         self.prefetch = prefetch
         self.params: PyTree = None
         self._backend_spec = backend
+        self._participation_spec = participation
+        self.plan = None
         self._pipeline = None
         self._pipeline_src = None
+        self._round_cache = None  # (round, weights jnp, effective mask np)
         # §V-B per-event wall-clock depends only on construction args — price
         # each event kind once instead of re-summing every step
         self._event_times = {
@@ -251,17 +277,37 @@ class SyncScheduler:
         if spec is None:
             spec = _legacy_impl_backend(cfg.aggregation_impl, cfg.clusters, cfg.P())
         self.backend = resolve_backend(spec, cfg.clusters, cfg.P(), cfg.alpha)
+        from ..participation import resolve_plan
+
+        self.plan = resolve_plan(
+            self._participation_spec, cfg.clusters, profile=self.profile,
+            seed=seed,
+        )
+        # "full" routes through the legacy static-weight step: bit-identical
+        self._sampling = self.plan is not None and not self.plan.is_full
         lr = cfg.learning_rate
+
+        def local_sgd(params, batch):
+            grads = jax.vmap(jax.grad(model.loss))(params, batch)
+            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
 
         def make_step(event):
             def fused(params, batch):
-                grads = jax.vmap(jax.grad(model.loss))(params, batch)
-                params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+                params = local_sgd(params, batch)
                 if event != "local":
                     params = self.backend.transition(params, event)
                 return params
 
-            return jax.jit(fused, donate_argnums=0)
+            def fused_sampled(params, batch, weights):
+                params = local_sgd(params, batch)
+                if event != "local":
+                    params = self.backend.transition(
+                        params, event, weights=weights
+                    )
+                return params
+
+            return jax.jit(fused_sampled if self._sampling else fused,
+                           donate_argnums=0)
 
         self._step_fns = {e: make_step(e) for e in ("local", "intra", "inter")}
 
@@ -270,16 +316,53 @@ class SyncScheduler:
 
         self._global_model = jax.jit(global_model)
 
+    # -- participation plumbing ----------------------------------------------
+    def _round_participation(self, k: int):
+        """(weights jnp, effective mask np, per-event dt dict) of iteration
+        ``k``'s round.
+
+        The effective mask backfills empty clusters to full membership, so
+        pacing charges exactly the clients whose models the fallback
+        aggregation uploads.  The dt dict is filled lazily per event kind
+        (at most three entries) and discarded at the round boundary, so the
+        masked pricing costs one ``FleetTiming`` reduction per event kind
+        per round, not per iteration.
+        """
+        r = (k - 1) // (self.cfg.tau1 * self.cfg.tau2)
+        if self._round_cache is None or self._round_cache[0] != r:
+            self._round_cache = (
+                r,
+                jnp.asarray(self.plan.weights(r), jnp.float32),
+                self.plan.effective_mask(r),
+                {},
+            )
+        return self._round_cache[1], self._round_cache[2], self._round_cache[3]
+
     # -- one protocol iteration (local + scheduled aggregation) -------------
-    def _apply(self, k: int, staged_batch) -> str:
+    def _apply(self, k: int, staged_batch) -> tuple[str, float]:
         event = self.cfg.event_at(k)
-        self.params = self._step_fns[event](self.params, staged_batch)
-        return event
+        if self._sampling:
+            weights, mask, times = self._round_participation(k)
+            self.params = self._step_fns[event](self.params, staged_batch, weights)
+            if self.profile is None:
+                dt = self._event_times[event]
+            else:
+                if event not in times:
+                    times[event] = _event_time(
+                        self.latency, self.cfg.alpha, event, self.profile,
+                        participants=mask,
+                    )
+                dt = times[event]
+        else:
+            self.params = self._step_fns[event](self.params, staged_batch)
+            dt = self._event_times[event]
+        return event, dt
 
     def advance(self, k: int, stacked_batch: dict) -> str:
-        return self._apply(k, jax.tree.map(jnp.asarray, stacked_batch))
+        return self._apply(k, jax.tree.map(jnp.asarray, stacked_batch))[0]
 
     def iteration_time(self, event: str) -> float:
+        """Full-fleet §V-B pacing (participation-masked rounds may be cheaper)."""
         return self._event_times[event]
 
     def _next_batch(self, k: int, batch_source) -> PyTree:
@@ -294,8 +377,8 @@ class SyncScheduler:
         return self._pipeline.get(k)
 
     def step(self, k: int, batch_source) -> StepEvent:
-        event = self._apply(k, self._next_batch(k, batch_source))
-        return StepEvent(kind=event, iteration=k, dt=self._event_times[event])
+        event, dt = self._apply(k, self._next_batch(k, batch_source))
+        return StepEvent(kind=event, iteration=k, dt=dt)
 
     def global_params(self) -> PyTree:
         """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
@@ -328,7 +411,7 @@ class RoundScheduler:
 
     def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
                  backend=None, profile=None, rounds_per_step: int = 1,
-                 prefetch: bool = True):
+                 prefetch: bool = True, participation=None):
         if rounds_per_step < 1:
             raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
         self.fl = fl
@@ -340,6 +423,8 @@ class RoundScheduler:
         self.params: PyTree = None
         self.opt_state: PyTree = None
         self._backend_spec = backend
+        self._participation_spec = participation
+        self.plan = None
         self._pipeline = None
         self._pipeline_src = None
         self._proto = fl.protocol()
@@ -384,15 +469,43 @@ class RoundScheduler:
         self.backend = resolve_backend(
             spec, self._proto.clusters, self._proto.P(), fl.alpha
         )
+        from ..participation import resolve_plan
+
+        self.plan = resolve_plan(
+            self._participation_spec, self._proto.clusters,
+            profile=self.profile, seed=seed,
+        )
+        self._sampling = self.plan is not None and not self.plan.is_full
         self._round_step = jax.jit(
             build_fl_round_step(model, opt, fl, backend=self.backend,
-                                rounds_per_step=self.rounds_per_step),
+                                rounds_per_step=self.rounds_per_step,
+                                participation=self._sampling),
             donate_argnums=(0, 1),
         )
 
     def round_time(self) -> float:
         """Section V-B wall-clock of one full round (priced once at init)."""
         return self._round_time
+
+    def _masked_round_time(self, r: int) -> float:
+        """§V-B wall-clock of round ``r`` paced by the clients that actually
+        enter its aggregation (empty clusters backfill to full membership).
+
+        Each event kind is priced once per round and summed by schedule —
+        three ``FleetTiming`` reductions, not ``tau1 * tau2``.
+        """
+        if self.profile is None:
+            return self._round_time
+        mask = self.plan.effective_mask(r)
+        times = {
+            e: _event_time(self.latency, self.fl.alpha, e, self.profile,
+                           participants=mask)
+            for e in ("local", "intra", "inter")
+        }
+        return sum(
+            times[self._proto.event_at(i)]
+            for i in range(1, self.iterations_per_round + 1)
+        )
 
     def _superstep_batches(self, k: int, batch_source) -> PyTree:
         from .pipeline import BatchPipeline, device_batch, stack_window
@@ -412,13 +525,28 @@ class RoundScheduler:
 
     def step(self, k: int, batch_source) -> StepEvent:
         stacked = self._superstep_batches(k, batch_source)
-        self.params, self.opt_state, losses = self._round_step(
-            self.params, self.opt_state, stacked
-        )
+        if self._sampling:
+            # rounds (k-1)*R .. k*R-1, one weight vector per scanned round —
+            # a traced (R, C) operand, so redraws never recompile
+            r0 = (k - 1) * self.rounds_per_step
+            weights = jnp.asarray(
+                self.plan.stacked_weights(r0, self.rounds_per_step),
+                jnp.float32,
+            )
+            self.params, self.opt_state, losses = self._round_step(
+                self.params, self.opt_state, stacked, weights
+            )
+            dt = sum(self._masked_round_time(r0 + i)
+                     for i in range(self.rounds_per_step))
+        else:
+            self.params, self.opt_state, losses = self._round_step(
+                self.params, self.opt_state, stacked
+            )
+            dt = self.rounds_per_step * self._round_time
         return StepEvent(
             kind="round",
             iteration=k * self.iterations_per_step,
-            dt=self.rounds_per_step * self._round_time,
+            dt=dt,
             losses=losses,
         )
 
@@ -447,14 +575,26 @@ class AsyncScheduler:
     because the queue already determines the next event when a step finishes,
     the next cluster's batch gather is staged while the device is still
     executing the current update (``prefetch=False`` disables the overlap).
+
+    ``participation`` samples who contributes to each cluster event: the
+    fired cluster's eq. 20 weights are masked to the event's participants
+    and renormalized (a sampled-out client's update is *skipped*, not merged
+    stale — its weight is exactly 0), entering the donated update as traced
+    values.  When none of the cluster's members participate the event is
+    skipped outright (``StepEvent.kind == "skipped"``): no update, no
+    staleness mixing, no protocol-iteration increment — the cluster's gap
+    simply keeps growing while the wall-clock advances.
     """
 
     name = "async"
 
-    def __init__(self, cfg, backend=None, prefetch: bool = True):
+    def __init__(self, cfg, backend=None, prefetch: bool = True,
+                 participation=None):
         self.cfg = cfg
         self.prefetch = prefetch
         self._backend_spec = backend
+        self._participation_spec = participation
+        self.plan = None
         self._prefetched = None
 
     def bind(self, model, seed: int) -> None:
@@ -491,6 +631,17 @@ class AsyncScheduler:
             jnp.asarray(cfg.clusters.m_hat()[cfg.clusters.clients_of(j)], jnp.float32)
             for j in range(d)
         ]
+        from ..participation import resolve_plan
+
+        self.plan = resolve_plan(
+            self._participation_spec, cfg.clusters, profile=cfg.profile,
+            seed=seed,
+        )
+        self._sampling = self.plan is not None and not self.plan.is_full
+        self._client_idx = [
+            np.asarray(cfg.clusters.clients_of(j)) for j in range(d)
+        ]
+        self._m_hat_np = cfg.clusters.m_hat()
 
         def client_delta(params, batches, theta_i):
             """theta_i masked local epochs; returns normalized update (eq 19)."""
@@ -545,13 +696,29 @@ class AsyncScheduler:
             batch_source, self.cfg.clusters.clients_of(d), self._theta_max
         ))
 
+    def _event_weights(self, k: int, d: int):
+        """(m_hat jnp, participated) for event ``k`` on cluster ``d``.
+
+        The event index seeds the draw (deterministic, order-independent);
+        the fired cluster's ``m^`` sub-vector is masked to the participants
+        and renormalized, so non-participants carry weight exactly 0 in the
+        eq. 20 update.  All-masked clusters report ``participated=False``.
+        """
+        mask = self.plan.mask(k - 1)[self._client_idx[d]]
+        if not mask.any():
+            return None, False
+        w = np.where(mask, self._m_hat_np[self._client_idx[d]], 0.0)
+        return jnp.asarray(w / w.sum(), jnp.float32), True
+
     def step(self, k: int, batch_source) -> StepEvent:
         cfg = self.cfg
         prev_clock = self.clock
         self.clock, d = heapq.heappop(self._queue)
 
         # theta_max batches per client (masked beyond theta_i); usually staged
-        # by the previous step's prefetch while the device was busy
+        # by the previous step's prefetch while the device was busy.  Gathered
+        # even for skipped events so the batch streams stay identical across
+        # prefetch settings and participation draws.
         if (self._prefetched is not None and self._prefetched[0] is batch_source
                 and self._prefetched[1] == d):
             batches = self._prefetched[2]
@@ -559,18 +726,25 @@ class AsyncScheduler:
             batches = self._gather(batch_source, d)
         self._prefetched = None
 
-        self.y = self._cluster_update(
-            self.y, d, batches, self._thetas[d], self._m_hats[d]
+        m_hat, participated = (
+            self._event_weights(k, d) if self._sampling
+            else (self._m_hats[d], True)
         )
+        if participated:
+            self.y = self._cluster_update(
+                self.y, d, batches, self._thetas[d], m_hat
+            )
 
-        # staleness-aware inter-cluster mixing (eq. 21-22) via the backend
-        gaps = (self.t - self.last_update).astype(np.float64)
-        gaps[d] = 0.0
-        p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
-        self.y = self.backend.inter_cluster(self.y, jnp.asarray(p_t, jnp.float32), 1)
+            # staleness-aware inter-cluster mixing (eq. 21-22) via the backend
+            gaps = (self.t - self.last_update).astype(np.float64)
+            gaps[d] = 0.0
+            p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
+            self.y = self.backend.inter_cluster(
+                self.y, jnp.asarray(p_t, jnp.float32), 1
+            )
 
-        self.t += 1
-        self.last_update[d] = self.t
+            self.t += 1
+            self.last_update[d] = self.t
         # Next firing: service time, stretched by dropout retries when the
         # profile says some of the cluster's devices are flaky.
         service = self.iter_times[d]
@@ -583,7 +757,8 @@ class AsyncScheduler:
             nxt = self._queue[0][1]
             self._prefetched = (batch_source, nxt, self._gather(batch_source, nxt))
         return StepEvent(
-            kind="cluster", iteration=self.t, dt=self.clock - prev_clock, cluster=d
+            kind="cluster" if participated else "skipped",
+            iteration=self.t, dt=self.clock - prev_clock, cluster=d,
         )
 
     def global_params(self) -> PyTree:
@@ -740,6 +915,7 @@ def _make_sync(s: dict) -> SyncScheduler:
         cfg, latency=s.pop("latency", None), backend=s.pop("backend", None),
         profile=_as_profile(s, clusters.num_clients),
         prefetch=s.pop("prefetch", True),
+        participation=s.pop("participation", None),
     )
 
 
@@ -764,6 +940,7 @@ def _make_round(s: dict) -> RoundScheduler:
         backend=s.pop("backend", None), profile=_as_profile(s, fl.num_clients),
         rounds_per_step=s.pop("rounds_per_step", 1),
         prefetch=s.pop("prefetch", True),
+        participation=s.pop("participation", None),
     )
 
 
@@ -802,7 +979,8 @@ def _make_async(s: dict) -> AsyncScheduler:
         profile=profile,
     )
     return AsyncScheduler(
-        cfg, backend=s.pop("backend", None), prefetch=s.pop("prefetch", True)
+        cfg, backend=s.pop("backend", None), prefetch=s.pop("prefetch", True),
+        participation=s.pop("participation", None),
     )
 
 

@@ -1,8 +1,4 @@
-"""Synchronous SD-FEEL: legacy simulator shim + the SPMD iteration step.
-
-* ``SDFEELSimulator`` — deprecated shim over ``FederationRuntime`` with a
-  ``SyncScheduler`` (see ``runtime.py``).  Kept for backwards compatibility;
-  new code should construct runs via ``runtime.make_run``.
+"""Synchronous SD-FEEL: the SPMD iteration step + federated layout spec.
 
 * ``build_fl_train_step`` — the SPMD production path: one jitted SD-FEEL
   *iteration* where the client axis is sharded over the mesh ``data`` axis
@@ -13,88 +9,38 @@
   applied through an ``AggregationBackend`` (see ``backends.py``):
   ``impl="dense"`` uses the Lemma-1 einsum backend, ``impl="gossip"`` the
   shard_map ``CollectiveBackend`` (hypercube + ring-ppermute collectives).
+  With ``participation=True`` the step takes a fourth traced operand — the
+  round's masked-and-renormalized (C,) participation weights (see
+  ``repro.participation``).
+
+The long-deprecated ``SDFEELSimulator`` shim has been removed; build runs
+via ``repro.core.runtime.make_run({"scheduler": "sync", ...})`` (importing
+the old name raises ``ImportError`` saying exactly that).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..optim import Optimizer
 from .backends import resolve_backend
-from .latency import LatencyModel
 from .protocol import SDFEELConfig
-from .runtime import TrainHistory  # noqa: F401  (re-exported for back-compat)
 
 PyTree = Any
 
-__all__ = ["SDFEELSimulator", "FLSpec", "build_fl_train_step", "TrainHistory"]
+__all__ = ["FLSpec", "build_fl_train_step", "init_stacked"]
 
 
-
-
-# ---------------------------------------------------------------------------
-# Deprecated host-driven simulator (now a FederationRuntime shim)
-# ---------------------------------------------------------------------------
-
-class SDFEELSimulator:
-    """Deprecated: use ``runtime.make_run({"scheduler": "sync", ...})``.
-
-    Thin delegating wrapper over ``FederationRuntime(SyncScheduler)`` that
-    preserves the historical API (``step(k, batch)``, mutable ``params``,
-    ``iteration_time``, ``global_params``, ``run``).
-    """
-
-    def __init__(
-        self,
-        model,
-        cfg: SDFEELConfig,
-        latency: Optional[LatencyModel] = None,
-        seed: int = 0,
-    ):
-        from .runtime import FederationRuntime, SyncScheduler
-
-        warnings.warn(
-            "SDFEELSimulator is deprecated; use repro.core.runtime.make_run "
-            "with scheduler='sync'",
-            DeprecationWarning,
-            stacklevel=2,
+def __getattr__(name: str):
+    if name == "SDFEELSimulator":
+        raise ImportError(
+            "SDFEELSimulator was removed; use repro.core.runtime.make_run("
+            "{'scheduler': 'sync', ...}) instead"
         )
-        self.model = model
-        self.cfg = cfg
-        self.latency = latency
-        self.runtime = FederationRuntime(
-            model, SyncScheduler(cfg, latency=latency), seed=seed
-        )
-
-    @property
-    def params(self) -> PyTree:
-        return self.runtime.scheduler.params
-
-    @params.setter
-    def params(self, value: PyTree) -> None:
-        self.runtime.scheduler.params = value
-
-    def step(self, k: int, stacked_batch: dict) -> str:
-        return self.runtime.scheduler.advance(k, stacked_batch)
-
-    def iteration_time(self, event: str) -> float:
-        return self.runtime.scheduler.iteration_time(event)
-
-    def global_params(self) -> PyTree:
-        return self.runtime.global_params()
-
-    def run(
-        self,
-        num_iterations: int,
-        batch_fn: Callable[[int], dict],
-        eval_batch: Optional[dict] = None,
-        eval_every: int = 50,
-    ) -> TrainHistory:
-        return self.runtime.run(num_iterations, batch_fn, eval_batch, eval_every)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -142,14 +88,18 @@ def build_fl_train_step(
     mesh: Optional[jax.sharding.Mesh] = None,
     param_specs: Optional[PyTree] = None,
     microbatch: int = 1,
+    participation: bool = False,
 ):
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state, loss).
+    """Returns train_step(params, opt_state, batch[, weights]) ->
+    (params, opt_state, loss).
 
     ``params``/``opt_state`` carry a leading client axis of size
     ``fl.num_clients``.  ``batch`` leaves are (C, per_client_batch, ...).
     ``event`` statically selects which Lemma-1 transition the step applies.
     ``mesh``/``param_specs`` are required for the ``gossip`` impl
-    (``CollectiveBackend`` under shard_map).
+    (``CollectiveBackend`` under shard_map).  With ``participation=True`` the
+    step takes a traced (C,) ``weights`` operand (a ``ParticipationPlan``
+    round vector) applied to the step's transition.
     """
     proto = fl.protocol()
 
@@ -165,10 +115,7 @@ def build_fl_train_step(
     else:
         backend = resolve_backend("dense", proto.clusters, proto.P(), fl.alpha)
 
-    def _aggregate(params):
-        return backend.transition(params, event)
-
-    def train_step(params, opt_state, batch):
+    def _local_update(params, opt_state, batch):
         def client_loss(p, b):
             return model.loss(p, b)
 
@@ -194,10 +141,19 @@ def build_fl_train_step(
         else:
             loss, grads = jax.vmap(jax.value_and_grad(client_loss))(params, batch)
         params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
-        params = _aggregate(params)
+        return params, opt_state, loss
+
+    def train_step(params, opt_state, batch):
+        params, opt_state, loss = _local_update(params, opt_state, batch)
+        params = backend.transition(params, event)
         return params, opt_state, loss.mean()
 
-    return train_step
+    def train_step_p(params, opt_state, batch, weights):
+        params, opt_state, loss = _local_update(params, opt_state, batch)
+        params = backend.transition(params, event, weights=weights)
+        return params, opt_state, loss.mean()
+
+    return train_step_p if participation else train_step
 
 
 def init_stacked(model, num_clients: int, rng) -> PyTree:

@@ -1,6 +1,7 @@
 """Device-heterogeneity subsystem: profiles, samplers, and fleet timing."""
 from .profiles import (
     DeviceProfile,
+    TraceSchedule,
     PROFILE_REGISTRY,
     register_profile,
     sample_profile,
@@ -9,6 +10,7 @@ from .timing import ClusterDropout, FleetTiming
 
 __all__ = [
     "DeviceProfile",
+    "TraceSchedule",
     "PROFILE_REGISTRY",
     "register_profile",
     "sample_profile",

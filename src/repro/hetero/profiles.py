@@ -12,12 +12,25 @@ variance.  A :class:`DeviceProfile` captures one simulated fleet:
   ``R^{ct-sr}``; a client at 0.5 uploads at half the Table-I rate.
 * ``availability`` — per-client probability of being reachable when an
   iteration starts; the dropout process draws geometric retry counts from
-  it (a device that is down delays its cluster by one compute deadline).
+  it (a device that is down delays its cluster by one compute deadline),
+  and ``ParticipationPlan("availability")`` Bernoulli-samples it per round.
+  ``availability == 0`` is legal: a permanently-dead client is meaningful
+  under participation sampling (it simply never aggregates; the retry
+  pricing caps its delay at ``timing.MAX_ATTEMPTS`` service times).
 
 Fleets are drawn by *registered samplers* — ``uniform``,
 ``bimodal-straggler``, ``exponential``, ``trace`` — so scenarios name their
 device mix the same way they name topologies.  ``sample_profile`` accepts a
 name, a ``{"kind": name, ...params}`` dict, or a ready profile.
+
+The ``trace`` sampler additionally accepts *time-varying* schedules: 2-D
+``(T, n)`` ``speeds``/``availability`` arrays become a
+:class:`TraceSchedule` attached to the profile (``profile.schedule``); the
+static profile columns are the schedule's per-client time averages, and the
+schedule itself drives trace-replay participation
+(``ParticipationPlan("trace")`` advances one row per aggregation round) and
+any other consumer via ``speeds_at(t)`` / ``availability_at(t)`` (cycling
+when a run outlives the trace).
 """
 from __future__ import annotations
 
@@ -28,10 +41,65 @@ import numpy as np
 
 __all__ = [
     "DeviceProfile",
+    "TraceSchedule",
+    "MAX_ATTEMPTS",
     "PROFILE_REGISTRY",
     "register_profile",
     "sample_profile",
 ]
+
+# Bound on dropout retries per event: keeps Lemma-4 iteration gaps finite
+# even under availability -> 0 (a device that never answers is eventually
+# skipped by the edge server, not waited on forever).  Also the floor on
+# effective pacing speed: availability below 1/MAX_ATTEMPTS prices like
+# exactly MAX_ATTEMPTS retries.
+MAX_ATTEMPTS = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSchedule:
+    """Time-varying per-device measurements: one row per schedule step.
+
+    ``speeds[t, i]`` / ``availability[t, i]`` are device ``i``'s relative
+    compute speed and up-probability at step ``t``; consumers cycle through
+    the trace when a run is longer than it (``t % num_steps``) and choose
+    the step granularity: ``ParticipationPlan("trace")`` advances one row
+    per aggregation *round* (sync/round schedulers) or per cluster *event*
+    (async), while a per-iteration pacing consumer may index per protocol
+    iteration.
+    """
+
+    speeds: np.ndarray        # (T, N), > 0
+    availability: np.ndarray  # (T, N), in [0, 1]
+
+    def __post_init__(self):
+        speeds = np.asarray(self.speeds, dtype=np.float64)
+        avail = np.asarray(self.availability, dtype=np.float64)
+        if speeds.ndim != 2 or avail.shape != speeds.shape:
+            raise ValueError(
+                "trace schedule needs matching 2-D (T, N) speed and "
+                f"availability arrays; got {speeds.shape} / {avail.shape}"
+            )
+        if np.any(speeds <= 0):
+            raise ValueError("trace speeds must be positive")
+        if np.any(avail < 0) or np.any(avail > 1):
+            raise ValueError("trace availability must lie in [0, 1]")
+        object.__setattr__(self, "speeds", speeds)
+        object.__setattr__(self, "availability", avail)
+
+    @property
+    def num_steps(self) -> int:
+        return self.speeds.shape[0]
+
+    @property
+    def num_clients(self) -> int:
+        return self.speeds.shape[1]
+
+    def speeds_at(self, t: int) -> np.ndarray:
+        return self.speeds[t % self.num_steps]
+
+    def availability_at(self, t: int) -> np.ndarray:
+        return self.availability[t % self.num_steps]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,8 +108,9 @@ class DeviceProfile:
 
     speeds: np.ndarray        # h_i >= 1, min == 1 (slowest device = reference)
     bandwidths: np.ndarray    # uplink scale vs. paper R^{ct-sr}; > 0
-    availability: np.ndarray  # P(device up at iteration start); in (0, 1]
+    availability: np.ndarray  # P(device up at iteration start); in [0, 1]
     name: str = "custom"
+    schedule: Optional["TraceSchedule"] = None  # time-varying trace, if any
 
     def __post_init__(self):
         speeds = np.asarray(self.speeds, dtype=np.float64)
@@ -52,8 +121,15 @@ class DeviceProfile:
             raise ValueError("speeds, bandwidths, availability must share length")
         if np.any(speeds <= 0) or np.any(bw <= 0):
             raise ValueError("speeds and bandwidths must be positive")
-        if np.any(avail <= 0) or np.any(avail > 1):
-            raise ValueError("availability must lie in (0, 1]")
+        # 0 is legal: a permanently-dead client only matters to participation
+        # sampling and the (capped) retry pricing, both of which handle it.
+        if np.any(avail < 0) or np.any(avail > 1):
+            raise ValueError("availability must lie in [0, 1]")
+        if self.schedule is not None and self.schedule.num_clients != n:
+            raise ValueError(
+                f"trace schedule covers {self.schedule.num_clients} clients, "
+                f"profile has {n}"
+            )
         object.__setattr__(self, "speeds", speeds)
         object.__setattr__(self, "bandwidths", bw)
         object.__setattr__(self, "availability", avail)
@@ -70,9 +146,12 @@ class DeviceProfile:
         """Availability-discounted throughput: expected useful speed.
 
         A device up with probability ``a`` needs ``1/a`` attempts per useful
-        iteration in expectation, so its long-run pacing speed is ``h * a``.
+        iteration in expectation, so its long-run pacing speed is ``h * a``
+        — floored at ``h / MAX_ATTEMPTS``, the capped-retry model: after
+        ``MAX_ATTEMPTS`` deadlines the edge server skips the device rather
+        than waiting on it, so ``a == 0`` prices finitely.
         """
-        return self.speeds * self.availability
+        return self.speeds * np.maximum(self.availability, 1.0 / MAX_ATTEMPTS)
 
     @staticmethod
     def homogeneous(num_clients: int) -> "DeviceProfile":
@@ -180,24 +259,80 @@ def trace_profile(
 ) -> DeviceProfile:
     """Replay measured per-device traces, cycling when shorter than the fleet.
 
-    ``speeds`` is required; bandwidth/availability default to nominal.  This
-    is the hook for real testbed measurements (see ROADMAP open items).
+    ``speeds`` is required; bandwidth/availability default to nominal.
+
+    Static mode (1-D arrays): one measurement per device, cycled over the
+    fleet — the original behavior.
+
+    Time-varying mode (2-D ``(T, n)`` ``speeds`` and/or ``availability``):
+    per-iteration schedules become a :class:`TraceSchedule` on
+    ``profile.schedule`` (a 1-D counterpart array is broadcast across the
+    ``T`` rows).  The profile's static columns are the schedule's
+    per-client time averages — they price deadlines/retries in the mean —
+    while the schedule itself drives trace-replay participation
+    (``ParticipationPlan("trace")``) and any per-iteration consumer.
+    Speeds are normalized by the *global* trace minimum, so the
+    slowest-ever measurement is the §V-B reference device.
     """
     if speeds is None:
         raise ValueError("trace profile requires a 'speeds' array")
+    speeds = np.asarray(speeds, dtype=np.float64)
+    avail_in = None if availability is None else np.asarray(
+        availability, dtype=np.float64
+    )
 
-    def tile(arr, fill):
+    def tile_cols(arr):
+        """Cycle per-device columns up to the fleet size (1-D or 2-D rows)."""
+        reps = -(-num_clients // arr.shape[-1])
+        return np.tile(arr, (1,) * (arr.ndim - 1) + (reps,))[..., :num_clients]
+
+    if speeds.ndim == 1 and (avail_in is None or avail_in.ndim == 1):
+        # static mode: unchanged seed behavior
+        def tile(arr, fill):
+            if arr is None:
+                return np.full(num_clients, fill, dtype=np.float64)
+            return tile_cols(np.asarray(arr, dtype=np.float64))
+
+        return DeviceProfile(
+            _normalize_speeds(tile(speeds, 1.0)),
+            tile(bandwidths, 1.0),
+            tile(availability, 1.0),
+            name="trace",
+        )
+
+    # time-varying mode: align speed/availability columns and rows
+    sp = tile_cols(np.atleast_2d(speeds))
+    if avail_in is None:
+        av = np.ones_like(sp)
+    else:
+        av = tile_cols(np.atleast_2d(avail_in))
+    t_len = int(np.lcm(sp.shape[0], av.shape[0]))
+    # near-coprime lengths (e.g. 1439 vs 1440 rows) only align after an
+    # enormous joint period — refuse to materialize it rather than OOM
+    if t_len > 100_000:
+        raise ValueError(
+            f"trace speed/availability lengths {sp.shape[0]} / {av.shape[0]} "
+            f"only align after {t_len} rows; resample one trace so the "
+            f"lengths share a small common multiple"
+        )
+    sp = np.tile(sp, (t_len // sp.shape[0], 1))
+    av = np.tile(av, (t_len // av.shape[0], 1))
+    schedule = TraceSchedule(sp / sp.min(), av)
+
+    def tile_static(arr, fill):
         if arr is None:
             return np.full(num_clients, fill, dtype=np.float64)
         arr = np.asarray(arr, dtype=np.float64)
-        reps = -(-num_clients // len(arr))
-        return np.tile(arr, reps)[:num_clients]
+        if arr.ndim != 1:
+            raise ValueError("trace bandwidths must be 1-D (static)")
+        return tile_cols(arr)
 
     return DeviceProfile(
-        _normalize_speeds(tile(speeds, 1.0)),
-        tile(bandwidths, 1.0),
-        tile(availability, 1.0),
+        schedule.speeds.mean(axis=0),
+        tile_static(bandwidths, 1.0),
+        schedule.availability.mean(axis=0),
         name="trace",
+        schedule=schedule,
     )
 
 

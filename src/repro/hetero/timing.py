@@ -24,14 +24,9 @@ import numpy as np
 
 from ..core.latency import LatencyModel
 from ..core.protocol import ClusterSpec
-from .profiles import DeviceProfile
+from .profiles import MAX_ATTEMPTS, DeviceProfile
 
-__all__ = ["FleetTiming", "ClusterDropout"]
-
-# Bound on dropout retries per event: keeps Lemma-4 iteration gaps finite
-# even under availability -> 0 (a device that never answers is eventually
-# skipped by the edge server, not waited on forever).
-MAX_ATTEMPTS = 10
+__all__ = ["FleetTiming", "ClusterDropout", "MAX_ATTEMPTS"]
 
 
 class ClusterDropout:
@@ -45,16 +40,24 @@ class ClusterDropout:
 
     def __init__(self, availability: np.ndarray, seed: int = 0):
         avail = np.asarray(availability, dtype=np.float64)
-        if np.any(avail <= 0) or np.any(avail > 1):
-            raise ValueError("availability must lie in (0, 1]")
+        if np.any(avail < 0) or np.any(avail > 1):
+            raise ValueError("availability must lie in [0, 1]")
         self.availability = avail
         self._rng = np.random.default_rng(seed)
 
     def attempts(self, d: int) -> int:
-        """Total attempts (>= 1) for cluster ``d``'s next iteration."""
+        """Total attempts (>= 1) for cluster ``d``'s next iteration.
+
+        ``availability == 0`` (a permanently-dead member — meaningful under
+        participation sampling) is priced at the retry cap rather than a
+        geometric draw: the edge server gives up after ``MAX_ATTEMPTS``
+        deadlines, it does not wait forever.
+        """
         a = self.availability[d]
         if a >= 1.0:
             return 1
+        if a <= 0.0:
+            return MAX_ATTEMPTS
         return int(min(self._rng.geometric(a), MAX_ATTEMPTS))
 
 
@@ -66,22 +69,37 @@ class FleetTiming:
     latency: Optional[LatencyModel] = None
 
     # -- synchronous pacing --------------------------------------------------
-    def sync_event_time(self, event: str, alpha: int = 1) -> float:
+    def sync_event_time(
+        self, event: str, alpha: int = 1, participants=None
+    ) -> float:
         """Per-iteration wall-clock of a synchronous step under this fleet.
 
         Local compute waits for the slowest *effective* client (speed
         discounted by availability: a device that answers half the time
         halves its useful speed in expectation); uploads at aggregation
-        events wait for the narrowest uplink.
+        events wait for the narrowest uplink.  Availability is floored at
+        ``1 / MAX_ATTEMPTS`` — the capped-retry model: a dead device is
+        skipped after ``MAX_ATTEMPTS`` deadlines, never divided by.
+
+        ``participants`` (optional boolean mask) restricts pacing to the
+        round's participating clients — the wall-clock upside of sampling:
+        an unsampled straggler paces nothing.  Pass the plan's
+        ``effective_mask`` (empty clusters backfilled), not the raw mask, so
+        clients pulled back in by the aggregation fallback are charged; a
+        mask with no participants at all falls back to the full fleet.
         """
         if self.latency is None:
             return 0.0
         eff = self.profile.effective_speeds()
+        bw = self.profile.bandwidths
+        if participants is not None:
+            participants = np.asarray(participants, dtype=bool)
+            if participants.any():
+                eff = eff[participants]
+                bw = bw[participants]
         t = self.latency.t_comp(float(eff.min()))
         if event in ("intra", "inter"):
-            t += self.latency.t_comm_client_server(
-                float(self.profile.bandwidths.min())
-            )
+            t += self.latency.t_comm_client_server(float(bw.min()))
         if event == "inter":
             t += alpha * self.latency.t_comm_server_server()
         return t

@@ -38,6 +38,9 @@ def run_scenario(args) -> None:
         return
     sc = get_scenario(args.scenario)
     overrides = {"seed": args.seed, "backend": args.backend}
+    part = _participation_spec(args)
+    if part is not None:
+        overrides["participation"] = part
     # every explicitly-set flag overrides the registered config (None = unset)
     for flag, key in (("clients", "num_clients"), ("clusters", "num_clusters"),
                       ("samples", "num_samples"), ("tau1", "tau1"),
@@ -59,6 +62,15 @@ def run_scenario(args) -> None:
     acc = f" acc={hist.accuracy[-1]:.3f}" if hist.accuracy else ""
     print(f"done: steps={args.steps} loss={hist.loss[-1]:.4f}{acc} "
           f"simulated_wallclock={hist.wallclock[-1]:.1f}s ({time.time() - t0:.1f}s real)")
+
+
+def _participation_spec(args):
+    """Turn --participation/--participation-k into a repro.participation spec."""
+    if args.participation is None:
+        return None
+    if args.participation == "uniform-k":
+        return {"strategy": "uniform-k", "k": args.participation_k}
+    return args.participation
 
 
 def main(argv=None):
@@ -86,6 +98,15 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "dense", "pallas", "collective"],
                     help="aggregation backend for the Lemma-1 transition")
+    ap.add_argument("--participation", default=None,
+                    choices=["full", "uniform-k", "availability", "trace"],
+                    help="per-round client participation strategy "
+                         "(repro.participation); 'full' is the default "
+                         "everyone-aggregates behavior")
+    ap.add_argument("--participation-k", dest="participation_k", type=int,
+                    default=1,
+                    help="clients sampled per cluster per round for "
+                         "--participation uniform-k")
     ap.add_argument("--batch", type=int, default=None, help="default 4 (LM path)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -107,7 +128,7 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = CausalLM(cfg)
-    runtime = make_run({
+    scenario = {
         "scheduler": "round",
         "model": model,
         "num_clients": args.clients,
@@ -119,7 +140,11 @@ def main(argv=None):
         "seed": args.seed,
         "backend": args.backend,
         "rounds_per_step": args.rounds_per_step,
-    })
+    }
+    part = _participation_spec(args)
+    if part is not None:
+        scenario["participation"] = part
+    runtime = make_run(scenario)
     sched = runtime.scheduler
     ipr = sched.iterations_per_round
     rps = sched.rounds_per_step

@@ -52,6 +52,7 @@ class Scenario:
     topology: str = "ring"
     backend: str = "auto"
     profile: Union[str, dict, None] = None   # repro.hetero sampler spec
+    participation: Union[str, dict, None] = None  # repro.participation spec
     num_clients: int = 20
     num_clusters: int = 4
     tau1: int = 5
@@ -153,6 +154,8 @@ class Scenario:
                        theta_max=self.theta_max)
         if self.profile is not None:
             cfg["profile"] = self.profile
+        if self.participation is not None:
+            cfg["participation"] = self.participation
         cfg.update(overrides)
         # the fleet sampler follows the run seed whether the profile came
         # from the template or an override (unless explicitly pinned)
@@ -274,6 +277,25 @@ register_scenario(Scenario(
                 "dispatch with batch prefetch (throughput lane).",
     scheduler="round", partition="iid", tau1=2, tau2=2, alpha=2,
     num_clients=8, rounds_per_step=4,
+))
+
+register_scenario(Scenario(
+    name="sampled-k-ring",
+    description="FedAvg-style partial participation: 2 of each cluster's 5 "
+                "clients sampled per round (uniform-k), label-skew ring.",
+    scheduler="sync", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+    participation={"strategy": "uniform-k", "k": 2},
+))
+
+register_scenario(Scenario(
+    name="dropout-participation-async",
+    description="Flaky fleet where dropout gates aggregation itself: "
+                "Bernoulli availability participation on the async event "
+                "queue (all-down cluster events are skipped).",
+    scheduler="async", partition="iid",
+    profile={"kind": "uniform", "heterogeneity": 4.0, "availability": 0.7},
+    participation="availability", psi="staleness",
 ))
 
 register_scenario(Scenario(

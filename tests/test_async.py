@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AsyncConfig, AsyncSDFEEL, ClusterSpec, make_speeds, psi_constant, ring,
+    AsyncConfig, AsyncScheduler, ClusterSpec, FederationRuntime, make_speeds,
+    psi_constant, ring,
 )
 from repro.core.theory import delta_max
 from repro.data import ClientBatcher, FederatedDataset, mnist_like, iid_partition
@@ -46,11 +47,11 @@ def test_async_runs_and_learns(setup):
     cfg = AsyncConfig(clusters=spec, topology=ring(4),
                       speeds=make_speeds(8, 4.0, seed=3),
                       learning_rate=0.05, min_batches=2, theta_max=6)
-    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    eng = FederationRuntime(MnistCNN(), AsyncScheduler(cfg), seed=0)
     batcher = ClientBatcher(ds, 8, seed=0)
     hist = eng.run(24, batcher, eval_batch, eval_every=12)
     assert hist.loss[-1] < hist.loss[0] * 1.05
-    assert eng.t == 24
+    assert eng.scheduler.t == 24
 
 
 def test_iteration_gaps_bounded_by_lemma4(setup):
@@ -58,13 +59,13 @@ def test_iteration_gaps_bounded_by_lemma4(setup):
     cfg = AsyncConfig(clusters=spec, topology=ring(4),
                       speeds=make_speeds(8, 6.0, seed=4),
                       min_batches=2, theta_max=8)
-    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    eng = FederationRuntime(MnistCNN(), AsyncScheduler(cfg), seed=0)
     batcher = ClientBatcher(ds, 4, seed=0)
     bound = delta_max(cfg.iter_times())
     max_gap = 0
     for _ in range(30):
         eng.step(batcher)
-        gaps = eng.t - eng.last_update
+        gaps = eng.scheduler.t - eng.scheduler.last_update
         max_gap = max(max_gap, int(gaps.max()))
     assert max_gap <= bound + len(cfg.iter_times())  # slack: startup transient
 
@@ -74,10 +75,10 @@ def test_vanilla_async_uses_constant_weights(setup):
     cfg = AsyncConfig(clusters=spec, topology=ring(4),
                       speeds=make_speeds(8, 4.0, seed=5),
                       psi=psi_constant, min_batches=2)
-    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    eng = FederationRuntime(MnistCNN(), AsyncScheduler(cfg), seed=0)
     batcher = ClientBatcher(ds, 4, seed=0)
     eng.step(batcher)  # must run without error
-    assert eng.t == 1
+    assert eng.scheduler.t == 1
 
 
 def test_event_queue_orders_by_speed(setup):
@@ -85,9 +86,9 @@ def test_event_queue_orders_by_speed(setup):
     ds, spec, _ = setup
     speeds = np.array([1, 1, 1, 1, 4, 4, 4, 4], dtype=float)  # clusters 2,3 fast
     cfg = AsyncConfig(clusters=spec, topology=ring(4), speeds=speeds, min_batches=2)
-    eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
+    eng = FederationRuntime(MnistCNN(), AsyncScheduler(cfg), seed=0)
     batcher = ClientBatcher(ds, 4, seed=0)
     counts = np.zeros(4, dtype=int)
     for _ in range(24):
-        counts[eng.step(batcher)] += 1
+        counts[eng.step(batcher).cluster] += 1
     assert counts[2] + counts[3] > counts[0] + counts[1]

@@ -8,7 +8,7 @@ import pytest
 
 from repro import optim
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.core import ClusterSpec, SDFEELConfig, SDFEELSimulator, ring
+from repro.core import ClusterSpec, FederationRuntime, SDFEELConfig, SyncScheduler, ring
 from repro.data import FederatedDataset, mnist_like, iid_partition
 from repro.models import MnistCNN
 
@@ -60,22 +60,27 @@ def test_training_resume_bitexact(tmp_path):
         rng = np.random.default_rng(seed)
         return [ds.stacked_batch(4, rng) for _ in range(6)]
 
+    def sync_runtime():
+        return FederationRuntime(MnistCNN(), SyncScheduler(cfg), seed=0)
+
     # uninterrupted: 6 steps
-    sim_a = SDFEELSimulator(MnistCNN(), cfg, seed=0)
+    sim_a = sync_runtime()
     for k, b in enumerate(batches(9), start=1):
-        sim_a.step(k, b)
+        sim_a.scheduler.advance(k, b)
 
     # interrupted at 3, checkpoint, resume
-    sim_b = SDFEELSimulator(MnistCNN(), cfg, seed=0)
+    sim_b = sync_runtime()
     bs = batches(9)
     for k in range(1, 4):
-        sim_b.step(k, bs[k - 1])
-    save_checkpoint(str(tmp_path), sim_b.params, step=3)
+        sim_b.scheduler.advance(k, bs[k - 1])
+    save_checkpoint(str(tmp_path), sim_b.scheduler.params, step=3)
 
-    sim_c = SDFEELSimulator(MnistCNN(), cfg, seed=0)
-    sim_c.params, _ = restore_checkpoint(str(tmp_path), sim_c.params)
+    sim_c = sync_runtime()
+    sim_c.scheduler.params, _ = restore_checkpoint(
+        str(tmp_path), sim_c.scheduler.params)
     for k in range(4, 7):
-        sim_c.step(k, bs[k - 1])
+        sim_c.scheduler.advance(k, bs[k - 1])
 
-    for a, b in zip(jax.tree.leaves(sim_a.params), jax.tree.leaves(sim_c.params)):
+    for a, b in zip(jax.tree.leaves(sim_a.scheduler.params),
+                    jax.tree.leaves(sim_c.scheduler.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)

@@ -60,8 +60,56 @@ def test_trace_profile_cycles_and_requires_speeds():
     p = sample_profile({"kind": "trace", "speeds": [1.0, 2.0, 4.0]}, 7)
     assert p.num_clients == 7
     np.testing.assert_allclose(p.speeds, [1, 2, 4, 1, 2, 4, 1])
+    assert p.schedule is None                 # static traces stay static
     with pytest.raises(ValueError, match="speeds"):
         sample_profile("trace", 4)
+
+
+def test_trace_profile_time_varying_schedule():
+    """2-D trace arrays attach a TraceSchedule (ROADMAP open item)."""
+    from repro.hetero import TraceSchedule
+
+    speeds = np.array([[1.0, 2.0], [2.0, 8.0], [1.0, 2.0]])
+    avail = np.array([[1.0, 1.0], [1.0, 0.0], [0.5, 1.0]])
+    p = sample_profile(
+        {"kind": "trace", "speeds": speeds, "availability": avail}, 4
+    )
+    sched = p.schedule
+    assert isinstance(sched, TraceSchedule)
+    assert sched.num_steps == 3 and sched.num_clients == 4
+    # columns cycle over the fleet; global min pins the reference device
+    np.testing.assert_allclose(sched.speeds_at(0), [1, 2, 1, 2])
+    np.testing.assert_allclose(sched.speeds_at(1), [2, 8, 2, 8])
+    np.testing.assert_allclose(sched.speeds_at(3), sched.speeds_at(0))  # cycles
+    np.testing.assert_allclose(sched.availability_at(1), [1, 0, 1, 0])
+    # static columns are the schedule's per-client time averages
+    np.testing.assert_allclose(p.speeds, sched.speeds.mean(axis=0))
+    np.testing.assert_allclose(p.availability, sched.availability.mean(axis=0))
+    # a 1-D availability broadcasts across the schedule rows
+    p2 = sample_profile(
+        {"kind": "trace", "speeds": speeds, "availability": [0.5, 1.0]}, 2
+    )
+    np.testing.assert_allclose(p2.schedule.availability_at(1), [0.5, 1.0])
+    # mismatched row counts align on their least common multiple
+    p3 = sample_profile(
+        {"kind": "trace",
+         "speeds": np.ones((2, 2)),
+         "availability": np.tile([[1.0, 1.0], [0.0, 0.0], [1.0, 0.0]], (1, 1))},
+        2,
+    )
+    assert p3.schedule.num_steps == 6
+    np.testing.assert_allclose(p3.schedule.availability_at(5), [1.0, 0.0])
+
+
+def test_trace_schedule_validation():
+    from repro.hetero import TraceSchedule
+
+    with pytest.raises(ValueError, match="2-D"):
+        TraceSchedule(np.ones(3), np.ones(3))
+    with pytest.raises(ValueError, match="positive"):
+        TraceSchedule(np.zeros((2, 2)), np.ones((2, 2)))
+    with pytest.raises(ValueError, match="0, 1"):
+        TraceSchedule(np.ones((2, 2)), 2 * np.ones((2, 2)))
 
 
 def test_sample_profile_validation():
@@ -79,9 +127,12 @@ def test_profile_field_validation():
     with pytest.raises(ValueError, match="positive"):
         DeviceProfile(np.array([1.0, -1.0, 1.0, 1.0]), ones, ones)
     with pytest.raises(ValueError, match="availability"):
-        DeviceProfile(ones, ones, np.array([0.5, 0.0, 1.0, 1.0]))
+        DeviceProfile(ones, ones, np.array([0.5, -0.1, 1.0, 1.0]))
     with pytest.raises(ValueError, match="length"):
         DeviceProfile(ones, np.ones(3), ones)
+    # 0 is legal: a permanently-dead client is meaningful under sampling
+    dead = DeviceProfile(ones, ones, np.array([0.5, 0.0, 1.0, 1.0]))
+    assert dead.availability[1] == 0.0
 
 
 def test_effective_speeds_discount_availability():
@@ -135,6 +186,24 @@ def test_dropout_process_geometric_and_deterministic():
     assert all(a.attempts(0) == 1 for _ in range(10))  # available: no retries
     from repro.hetero.timing import MAX_ATTEMPTS
     assert max(draws_a) <= MAX_ATTEMPTS
+
+
+def test_zero_availability_guarded_not_divided():
+    """availability == 0 prices at the retry cap (no division, no infinity)."""
+    from repro.hetero.timing import MAX_ATTEMPTS
+
+    dead = ClusterDropout(np.array([0.0, 1.0]), seed=0)
+    assert all(dead.attempts(0) == MAX_ATTEMPTS for _ in range(5))
+    prof = DeviceProfile(np.ones(4), np.ones(4),
+                         np.array([0.0, 1.0, 1.0, 1.0]))
+    t = FleetTiming(prof, MNIST_LATENCY).sync_event_time("inter", alpha=2)
+    assert np.isfinite(t)
+    # the dead device paces at speed 1/MAX_ATTEMPTS, not infinitely slowly
+    assert t == pytest.approx(
+        MNIST_LATENCY.t_comp(1.0 / MAX_ATTEMPTS)
+        + MNIST_LATENCY.t_comm_client_server()
+        + 2 * MNIST_LATENCY.t_comm_server_server()
+    )
 
 
 # ---------------------------------------------------------------------------

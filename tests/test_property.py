@@ -267,3 +267,65 @@ def test_batch_pipeline_lookahead_bounded(data):
     for k in range(1, n + 1):
         assert max(calls) - (k - 1) <= depth
         pipe.get(k)
+
+
+# ---------------------------------------------------------------------------
+# Participation: masked-renormalized weights (repro.participation)
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_renormalized_weights_cluster_stochastic(data):
+    """For any spec and mask: per-cluster unit mass, exact zeros off-mask
+    (unless the cluster is empty, which falls back to full m^), and the
+    induced transition T(w) = V(w) B stays column-stochastic."""
+    from repro.participation import renormalize_weights
+
+    spec = data.draw(cluster_spec(data.draw(st.integers(2, 5))))
+    c = spec.num_clients
+    mask = np.array(data.draw(st.lists(st.booleans(), min_size=c, max_size=c)))
+    w = renormalize_weights(spec.m_hat(), spec.assignments, mask)
+    assert np.all(w >= 0)
+    assign = np.asarray(spec.assignments)
+    for d in range(spec.num_clusters):
+        members = assign == d
+        np.testing.assert_allclose(w[members].sum(), 1.0)
+        if mask[members].any():
+            # dropped clients carry exactly zero weight
+            assert np.all(w[members & ~mask] == 0.0)
+        else:
+            np.testing.assert_array_equal(w[members], spec.m_hat()[members])
+    # T(w) = V(w) B: every column is a convex combination of client models
+    v_w = np.zeros((c, spec.num_clusters))
+    v_w[np.arange(c), assign] = w
+    t = v_w @ spec.B()
+    np.testing.assert_allclose(t.sum(axis=0), np.ones(c), atol=1e-12)
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_participation_masks_deterministic_and_in_bounds(data):
+    """Every registered sampling strategy: masks are deterministic in
+    (seed, round) and respect the strategy's cardinality contract."""
+    from repro.core.protocol import ClusterSpec
+    from repro.participation import ParticipationPlan
+
+    d = data.draw(st.integers(2, 4))
+    g = data.draw(st.integers(1, 4))
+    spec = ClusterSpec.uniform(d * g, d)
+    seed = data.draw(st.integers(0, 2**16))
+    r = data.draw(st.integers(0, 50))
+    k = data.draw(st.integers(1, g + 1))
+    plan_a = ParticipationPlan("uniform-k", spec, seed=seed, k=k)
+    plan_b = ParticipationPlan("uniform-k", spec, seed=seed, k=k)
+    m = plan_a.mask(r)
+    np.testing.assert_array_equal(m, plan_b.mask(r))
+    assign = np.asarray(spec.assignments)
+    for dd in range(d):
+        assert m[assign == dd].sum() == min(k, g)
+    avail = np.array(data.draw(st.lists(
+        st.floats(0.0, 1.0), min_size=d * g, max_size=d * g)))
+    ap = ParticipationPlan("availability", spec, seed=seed, availability=avail)
+    am = ap.mask(r)
+    np.testing.assert_array_equal(am, ap.mask(r))
+    assert np.all(~am[avail == 0.0])        # dead clients never participate

@@ -1,14 +1,14 @@
 """FederationRuntime + scheduler equivalence vs. the legacy engine semantics.
 
 Each scheduler is checked against an *independent* reference implementation
-of the paper math (not against the shims, which now delegate to the runtime):
+of the paper math:
 
 * SyncScheduler   vs. a hand-rolled Algorithm-1 loop (vmap(grad) + dense
   Lemma-1 transitions + §V-B clock);
 * RoundScheduler  vs. sequentially stepping ``build_fl_train_step`` through
   the schedule's events;
 * AsyncScheduler  vs. an independently simulated event queue (order,
-  staleness gaps) and the legacy ``AsyncSDFEEL`` facade.
+  staleness gaps).
 """
 import heapq
 
@@ -19,8 +19,8 @@ import pytest
 
 from repro import optim
 from repro.core import (
-    AsyncConfig, AsyncSDFEEL, ClusterSpec, FLSpec, MNIST_LATENCY, SDFEELConfig,
-    SDFEELSimulator, build_fl_train_step, init_stacked, make_run, make_speeds,
+    AsyncConfig, ClusterSpec, FLSpec, MNIST_LATENCY, SDFEELConfig,
+    build_fl_train_step, init_stacked, make_run, make_speeds,
     register_scheduler, ring, transition_matrix,
 )
 from repro.core.runtime import SCHEDULER_REGISTRY, FederationRuntime, StepEvent
@@ -90,26 +90,16 @@ def test_sync_scheduler_matches_reference_loop(fed_data):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
-def test_sync_shim_delegates_step_for_step(fed_data):
-    """Legacy SDFEELSimulator facade tracks the runtime exactly."""
-    ds, eval_batch = fed_data
-    spec = _cluster_spec(ds)
-    cfg = SDFEELConfig(clusters=spec, topology=ring(4), tau1=2, tau2=1,
-                       alpha=1, learning_rate=0.05)
-    with pytest.deprecated_call():
-        sim = SDFEELSimulator(MnistCNN(), cfg, latency=MNIST_LATENCY, seed=0)
-    runtime = make_run({
-        "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
-        "topology": "ring", "tau1": 2, "tau2": 1, "alpha": 1,
-        "learning_rate": 0.05, "latency": MNIST_LATENCY, "seed": 0,
-    })
-    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(1)
-    h1 = sim.run(8, lambda k: ds.stacked_batch(4, rng1), eval_batch, eval_every=4)
-    h2 = runtime.run(8, lambda k: ds.stacked_batch(4, rng2), eval_batch, eval_every=4)
-    np.testing.assert_allclose(h1.loss, h2.loss)
-    np.testing.assert_allclose(h1.wallclock, h2.wallclock)
-    np.testing.assert_allclose(h1.accuracy, h2.accuracy)
-    assert h1.iterations == h2.iterations
+def test_legacy_shims_removed_with_pointer():
+    """The deprecated facades raise ImportError naming make_run."""
+    with pytest.raises(ImportError, match="make_run"):
+        from repro.core import SDFEELSimulator  # noqa: F401
+    with pytest.raises(ImportError, match="make_run"):
+        from repro.core import AsyncSDFEEL  # noqa: F401
+    with pytest.raises(ImportError, match="make_run"):
+        from repro.core.sdfeel import SDFEELSimulator  # noqa: F401
+    with pytest.raises(ImportError, match="make_run"):
+        from repro.core.async_engine import AsyncSDFEEL  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -207,24 +197,22 @@ def test_async_scheduler_event_order_and_gaps(fed_data):
         np.testing.assert_array_equal(runtime.scheduler.last_update, last_update)
 
 
-def test_async_shim_matches_runtime(fed_data):
+def test_async_runtime_reproducible_across_instances(fed_data):
+    """Two identically-seeded async runtimes produce identical histories."""
     ds, eval_batch = fed_data
     spec = _cluster_spec(ds)
     speeds = make_speeds(8, 4.0, seed=5)
-    cfg = AsyncConfig(clusters=spec, topology=ring(4), speeds=speeds,
-                      learning_rate=0.05, min_batches=2, theta_max=6)
-    with pytest.deprecated_call():
-        eng = AsyncSDFEEL(MnistCNN(), cfg, seed=0)
-    runtime = make_run({
+    scenario = {
         "scheduler": "async", "model": MnistCNN(), "clusters": spec,
         "topology": "ring", "speeds": speeds, "learning_rate": 0.05,
         "min_batches": 2, "theta_max": 6, "seed": 0,
-    })
-    h1 = eng.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
-    h2 = runtime.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
+    }
+    r1, r2 = make_run(dict(scenario)), make_run(dict(scenario))
+    h1 = r1.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
+    h2 = r2.run(10, ClientBatcher(ds, 4, seed=0), eval_batch, eval_every=5)
     np.testing.assert_allclose(h1.loss, h2.loss)
     np.testing.assert_allclose(h1.wallclock, h2.wallclock)
-    assert eng.t == runtime.scheduler.t == 10
+    assert r1.scheduler.t == r2.scheduler.t == 10
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""End-to-end SD-FEEL training behaviour (simulator + SPMD step + baselines)."""
+"""End-to-end SD-FEEL training behaviour (sync runtime + SPMD step + baselines)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,9 +6,9 @@ import pytest
 
 from repro import optim
 from repro.core import (
-    ClusterSpec, FedAvgTrainer, FEELTrainer, FLSpec, HierFAVGTrainer,
-    MNIST_LATENCY, SDFEELConfig, SDFEELSimulator, build_fl_train_step,
-    init_stacked, ring, fully_connected,
+    ClusterSpec, FedAvgTrainer, FederationRuntime, FEELTrainer, FLSpec,
+    HierFAVGTrainer, MNIST_LATENCY, SDFEELConfig, SyncScheduler,
+    build_fl_train_step, init_stacked, ring, fully_connected,
 )
 from repro.data import FederatedDataset, mnist_like, skewed_label_partition
 from repro.models import MnistCNN
@@ -24,6 +24,11 @@ def fed_data():
     return ds, eval_batch
 
 
+def make_sim(model, cfg, latency=None, seed=0) -> FederationRuntime:
+    """Sync runtime with the historical simulator surface (scheduler.advance)."""
+    return FederationRuntime(model, SyncScheduler(cfg, latency=latency), seed=seed)
+
+
 def make_cfg(ds, d=4, tau1=2, tau2=1, alpha=1, topo=ring, lr=0.05):
     spec = ClusterSpec(ds.num_clients, tuple(i * d // ds.num_clients for i in range(ds.num_clients)),
                        ds.data_sizes())
@@ -33,7 +38,7 @@ def make_cfg(ds, d=4, tau1=2, tau2=1, alpha=1, topo=ring, lr=0.05):
 
 def test_simulator_loss_decreases(fed_data):
     ds, eval_batch = fed_data
-    sim = SDFEELSimulator(MnistCNN(), make_cfg(ds), latency=MNIST_LATENCY, seed=0)
+    sim = make_sim(MnistCNN(), make_cfg(ds), latency=MNIST_LATENCY, seed=0)
     rng = np.random.default_rng(0)
     hist = sim.run(40, lambda k: ds.stacked_batch(8, rng), eval_batch, eval_every=20)
     assert hist.loss[-1] < hist.loss[0]
@@ -43,21 +48,23 @@ def test_simulator_loss_decreases(fed_data):
 
 def test_consensus_equals_weighted_mean(fed_data):
     ds, _ = fed_data
-    sim = SDFEELSimulator(MnistCNN(), make_cfg(ds), seed=0)
+    cfg = make_cfg(ds)
+    sim = make_sim(MnistCNN(), cfg, seed=0)
     rng = np.random.default_rng(1)
     for k in range(1, 5):
-        sim.step(k, ds.stacked_batch(4, rng))
+        sim.scheduler.advance(k, ds.stacked_batch(4, rng))
     g = sim.global_params()
-    m = jnp.asarray(sim.cfg.clusters.m(), jnp.float32)
-    manual = jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), sim.params)
+    m = jnp.asarray(cfg.clusters.m(), jnp.float32)
+    manual = jax.tree.map(
+        lambda w: jnp.einsum("c...,c->...", w, m), sim.scheduler.params)
     for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(manual)):
         np.testing.assert_allclose(a, b, atol=1e-6)
 
 
 def test_identical_init_across_clients(fed_data):
     ds, _ = fed_data
-    sim = SDFEELSimulator(MnistCNN(), make_cfg(ds), seed=0)
-    for leaf in jax.tree.leaves(sim.params):
+    sim = make_sim(MnistCNN(), make_cfg(ds), seed=0)
+    for leaf in jax.tree.leaves(sim.scheduler.params):
         np.testing.assert_allclose(leaf[0], leaf[-1])
 
 
@@ -72,10 +79,10 @@ def test_fully_connected_inter_agg_syncs_all_clients(fed_data):
     spec = ClusterSpec.uniform(12, 4)
     cfg = SDFEELConfig(clusters=spec, topology=fully_connected(4),
                        tau1=1, tau2=1, alpha=1, learning_rate=0.05)
-    sim = SDFEELSimulator(MnistCNN(), cfg, seed=0)
+    sim = make_sim(MnistCNN(), cfg, seed=0)
     rng = np.random.default_rng(2)
-    sim.step(1, ds.stacked_batch(4, rng))  # k=1: inter event (tau1=tau2=1)
-    for leaf in jax.tree.leaves(sim.params):
+    sim.scheduler.advance(1, ds.stacked_batch(4, rng))  # k=1: inter (tau1=tau2=1)
+    for leaf in jax.tree.leaves(sim.scheduler.params):
         np.testing.assert_allclose(leaf[0], leaf[-1], atol=1e-5)
 
 
@@ -86,7 +93,7 @@ def test_spmd_step_matches_simulator_one_iteration(fed_data):
     cfg = SDFEELConfig(clusters=spec, topology=ring(4), tau1=1, tau2=1,
                        alpha=2, learning_rate=0.05)
     model = MnistCNN()
-    sim = SDFEELSimulator(model, cfg, seed=3)
+    sim = make_sim(model, cfg, seed=3)
     fl = FLSpec(num_clients=ds.num_clients, num_clusters=4, tau1=1, tau2=1,
                 alpha=2, learning_rate=cfg.learning_rate)
     step = jax.jit(build_fl_train_step(model, optim.sgd(cfg.learning_rate), fl, event="inter"))
@@ -94,9 +101,9 @@ def test_spmd_step_matches_simulator_one_iteration(fed_data):
     rng = np.random.default_rng(3)
     batch = jax.tree.map(jnp.asarray, ds.stacked_batch(4, rng))
     p_spmd, _, loss = step(params0, (), batch)
-    sim.params = params0
-    sim.step(1, batch)  # k=1 is an inter event under tau1=tau2=1
-    for a, b in zip(jax.tree.leaves(p_spmd), jax.tree.leaves(sim.params)):
+    sim.scheduler.params = params0
+    sim.scheduler.advance(1, batch)  # k=1 is an inter event under tau1=tau2=1
+    for a, b in zip(jax.tree.leaves(p_spmd), jax.tree.leaves(sim.scheduler.params)):
         np.testing.assert_allclose(a, b, atol=2e-5)
     assert bool(jnp.isfinite(loss))
 
@@ -143,13 +150,14 @@ def test_pallas_aggregation_matches_dense(fed_data):
     spec = ClusterSpec.uniform(12, 4)
     base = SDFEELConfig(clusters=spec, topology=ring(4), tau1=1, tau2=2,
                         alpha=2, learning_rate=0.05)
-    sim_dense = SDFEELSimulator(MnistCNN(), base, seed=6)
-    sim_pallas = SDFEELSimulator(
+    sim_dense = make_sim(MnistCNN(), base, seed=6)
+    sim_pallas = make_sim(
         MnistCNN(), dataclasses.replace(base, aggregation_impl="pallas"), seed=6)
     rng = np.random.default_rng(6)
     for k in range(1, 5):  # covers intra (k=1) and inter (k=2,4) events
         batch = ds.stacked_batch(4, rng)
-        sim_dense.step(k, batch)
-        sim_pallas.step(k, batch)
-    for a, b in zip(jax.tree.leaves(sim_dense.params), jax.tree.leaves(sim_pallas.params)):
+        sim_dense.scheduler.advance(k, batch)
+        sim_pallas.scheduler.advance(k, batch)
+    for a, b in zip(jax.tree.leaves(sim_dense.scheduler.params),
+                    jax.tree.leaves(sim_pallas.scheduler.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    ClusterSpec, MNIST_LATENCY, SDFEELConfig, SDFEELSimulator, ring,
-    fully_connected,
+    ClusterSpec, FederationRuntime, MNIST_LATENCY, SDFEELConfig, SyncScheduler,
+    ring, fully_connected,
 )
 from repro.data import FederatedDataset, mnist_like, skewed_label_partition
 from repro.models import MnistCNN
@@ -28,7 +28,8 @@ def run_sdfeel(ds, eval_batch, *, tau1=2, tau2=1, alpha=1, topo=ring, iters=40, 
     spec = ClusterSpec(12, tuple(i // 3 for i in range(12)), ds.data_sizes())
     cfg = SDFEELConfig(clusters=spec, topology=topo(4), tau1=tau1, tau2=tau2,
                        alpha=alpha, learning_rate=0.05)
-    sim = SDFEELSimulator(MnistCNN(), cfg, latency=MNIST_LATENCY, seed=seed)
+    sim = FederationRuntime(
+        MnistCNN(), SyncScheduler(cfg, latency=MNIST_LATENCY), seed=seed)
     rng = np.random.default_rng(seed)
     return sim.run(iters, lambda k: ds.stacked_batch(8, rng), eval_batch,
                    eval_every=iters)
