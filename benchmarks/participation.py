@@ -1,17 +1,26 @@
 """Partial-participation lane: sampled-k vs full aggregation wall-clock.
 
-Runs the paper's §V-A label-skew MNIST setting under the bimodal-straggler
-fleet twice through the sync scheduler:
+Runs the paper's §V-A label-skew MNIST setting under an edge fleet with two
+degraded clusters twice through the sync scheduler:
 
-* ``full``      — every client aggregates every round; each iteration is
-                  paced by the slowest effective device and the narrowest
-                  uplink (the straggler effect);
+* ``full``      — every client aggregates every round; per-cluster
+                  critical-path pricing charges cluster 0 its slow-CPU
+                  straggler and cluster 1 its narrow uplink every iteration
+                  (the straggler effect);
 * ``sampled-k`` — FedAvg-style ``uniform-k`` participation: ``k`` clients
                   per cluster per round, aggregation weights masked and
                   renormalized by the ``ParticipationPlan``, and — the
-                  wall-clock upside — each round paced only by the clients
-                  actually in it, so a round that misses every straggler
-                  runs at fast-device speed.
+                  wall-clock upside — each cluster paced only by its *own
+                  sampled members*, so a round that misses both degraded
+                  devices runs at nominal speed.
+
+The fleet is a ``trace`` profile built so the compute straggler and the
+narrow link live in *different* clusters: the pre-PR-6 fleet-global
+envelope priced every round with the worst CPU plus the worst uplink
+regardless of where (or whether) they participated, which quantized both
+regimes to the same straggler bound and pinned the measured speedup to
+exactly 1.0.  With events priced along each cluster's actual participant
+critical path the sampled regime demonstrably wins wall-clock.
 
 The headline is wall-clock-to-target-loss (the straggler_wallclock
 methodology: the target sits 5% above the worst regime's best loss, so both
@@ -45,7 +54,23 @@ HEADLINE_KEYS = ("target_loss", "full_time", "sampled_time", "speedup",
                  "wallclock_per_iter_ratio")
 
 SAMPLED_K = 2
-FLEET = {"kind": "bimodal-straggler", "straggler_frac": 0.25, "speedup": 10.0}
+
+
+def edge_fleet(n_clients: int, n_clusters: int) -> dict:
+    """One slow-CPU straggler (cluster 0) + one narrow uplink (cluster 1).
+
+    Clusters are contiguous blocks (``ClusterSpec.uniform``), so index 0
+    lands in cluster 0 and index ``n_clients // n_clusters`` in cluster 1.
+    Everyone else is nominal (10x compute, unit bandwidth): the two
+    bottlenecks pace *different* clusters, which is exactly the shape the
+    fleet-global pricing envelope got wrong.
+    """
+    per = n_clients // n_clusters
+    speeds = [10.0] * n_clients
+    bandwidths = [1.0] * n_clients
+    speeds[0] = 1.0
+    bandwidths[per] = 0.1
+    return {"kind": "trace", "speeds": speeds, "bandwidths": bandwidths}
 
 
 def main(smoke: bool = False) -> dict:
@@ -53,14 +78,15 @@ def main(smoke: bool = False) -> dict:
     elapsed = timer()
     if smoke:
         # cluster size must exceed SAMPLED_K or sampling degenerates to full
-        n_clients, n_clusters, n_samples, iters = 16, 4, 800, 32
+        n_clients, n_clusters, n_samples, iters = 24, 4, 1200, 32
     elif FULL:
-        n_clients, n_clusters, n_samples, iters = 40, 8, 6000, 240
+        n_clients, n_clusters, n_samples, iters = 48, 8, 6000, 240
     else:
-        n_clients, n_clusters, n_samples, iters = 16, 4, 2000, 96
+        n_clients, n_clusters, n_samples, iters = 32, 4, 3000, 96
     seed = 0
+    fleet = edge_fleet(n_clients, n_clusters)
     overrides = dict(seed=seed, num_clients=n_clients, num_clusters=n_clusters,
-                     num_samples=n_samples, profile=FLEET, tau1=2)
+                     num_samples=n_samples, profile=fleet, tau1=2)
 
     regimes = {
         "full": dict(overrides),
@@ -96,7 +122,7 @@ def main(smoke: bool = False) -> dict:
     ]
     payload = {
         "config": {
-            "fleet": FLEET, "num_clients": n_clients,
+            "fleet": fleet, "num_clients": n_clients,
             "num_clusters": n_clusters, "num_samples": n_samples,
             "iters": iters, "sampled_k": SAMPLED_K, "seed": seed,
             "smoke": smoke, "full": FULL,
@@ -127,6 +153,11 @@ def main(smoke: bool = False) -> dict:
     )
     assert all(t < float("inf") for t in times.values()), (
         f"a regime never crossed the target loss: {times}"
+    )
+    # the whole point of sampling under per-cluster critical-path pricing:
+    # rounds that dodge the degraded devices are measurably faster
+    assert speedup > 1.0, (
+        f"sampled-k shows no wall-clock-to-target advantage: {times}"
     )
     return {
         "target_loss": target,

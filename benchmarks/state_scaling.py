@@ -1,0 +1,164 @@
+"""Sparse-state lane: device memory vs fleet size under the host-offload store.
+
+The dense runtime keeps the stacked ``(N, ...)`` per-client tree on device,
+so device memory grows linearly in the fleet — a hard wall long before the
+paper-scale regimes (10^5-10^6 clients) the participation lane samples
+from.  :class:`repro.state.HostOffloadStore` keeps a fixed ``(k_max, ...)``
+buffer of resident client models and streams everyone else through host
+memory, so the device footprint is a function of ``k_max``, not ``N``.
+
+This benchmark proves that claim with the ``million-client-ring`` scenario
+(procedural data — nothing per-client is materialized) at a fixed
+``k_max=32`` across a fleet-size sweep:
+
+* ``host-offload`` rows: peak live device bytes must be flat in ``N``
+  (the smallest and largest sweep points agree within 10%);
+* a ``dense`` row at the smallest ``N`` anchors the comparison: same
+  scenario, same sampling, stacked resident state — device bytes scale
+  with ``N`` and proto-iterations/sec stay comparable.
+
+Results land in ``results/BENCH_state_scaling.json`` (schema + flatness
+asserted by the CI smoke step).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.state_scaling            # 1k/100k
+    REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.state_scaling
+    PYTHONPATH=src python -m benchmarks.state_scaling --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.scenarios import build_scenario
+from repro.state import live_device_bytes
+
+from .common import RESULTS, ensure_results, timer
+
+JSON_PATH = os.path.join(RESULTS, "BENCH_state_scaling.json")
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+
+# required keys of one sweep row / of the headline block (CI asserts these)
+ROW_KEYS = ("store", "num_clients", "k_max", "supersteps", "iterations",
+            "peak_device_bytes", "host_bytes", "iters_per_sec", "final_loss")
+HEADLINE_KEYS = ("k_max", "offload_bytes_small", "offload_bytes_large",
+                 "bytes_ratio", "dense_bytes", "dense_num_clients",
+                 "iters_per_sec_ratio")
+
+K_MAX = 32
+SCENARIO = "million-client-ring"
+# offload peak device bytes at the largest N over the smallest: the flatness
+# claim (1.0 = perfectly flat; CI gates on this bound)
+FLAT_TOL = 1.10
+
+
+def measure(num_clients: int, store, supersteps: int, seed: int = 0) -> dict:
+    """Train ``supersteps`` dispatches; report peak device bytes + rate.
+
+    The first superstep is excluded from the rate (it pays compilation);
+    device bytes are sampled after every superstep and the max reported —
+    on this backend ``jax.live_arrays`` is the footprint proxy, and the
+    steady-state peak is what an accelerator would have to hold.
+    """
+    run = build_scenario(SCENARIO, num_clients=num_clients, seed=seed,
+                         store=store)
+    batch_source = run.batch_source()
+    sched = run.runtime.scheduler
+    ipr = sched.iterations_per_round * sched.rounds_per_step
+    peak = 0
+    losses = None
+    t0 = None
+    for s in range(supersteps):
+        ev = run.runtime.step(batch_source)
+        losses = np.asarray(ev.losses)
+        peak = max(peak, live_device_bytes())
+        if s == 0:
+            t0 = time.time()  # rate excludes the compile superstep
+    rate = (supersteps - 1) * ipr / (time.time() - t0)
+    st = sched.store
+    return {
+        "store": st.kind,
+        "num_clients": num_clients,
+        "k_max": getattr(st, "k_max", num_clients),
+        "supersteps": supersteps,
+        "iterations": supersteps * ipr,
+        "peak_device_bytes": int(peak),
+        "host_bytes": int(st.host_bytes()) if hasattr(st, "host_bytes") else 0,
+        "iters_per_sec": rate,
+        "final_loss": float(losses[-1]),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    ensure_results()
+    elapsed = timer()
+    if smoke:
+        sweep, supersteps = [512, 8192], 3
+    elif FULL:
+        sweep, supersteps = [1_000, 100_000, 1_000_000], 4
+    else:
+        sweep, supersteps = [1_000, 100_000], 4
+    offload = {"kind": "host-offload", "k_max": K_MAX}
+
+    rows = []
+    # dense anchor at the smallest N: same scenario minus the offload store
+    rows.append(measure(sweep[0], "dense", supersteps))
+    print(f"  dense        N={rows[-1]['num_clients']:>9,} "
+          f"peak={rows[-1]['peak_device_bytes']:>12,}B "
+          f"{rows[-1]['iters_per_sec']:6.2f} it/s")
+    for n in sweep:
+        rows.append(measure(n, dict(offload), supersteps))
+        print(f"  host-offload N={n:>9,} "
+              f"peak={rows[-1]['peak_device_bytes']:>12,}B "
+              f"{rows[-1]['iters_per_sec']:6.2f} it/s")
+
+    off = [r for r in rows if r["store"] == "host-offload"]
+    dense = next(r for r in rows if r["store"] == "dense")
+    bytes_ratio = off[-1]["peak_device_bytes"] / off[0]["peak_device_bytes"]
+    headline = {
+        "k_max": K_MAX,
+        "offload_bytes_small": off[0]["peak_device_bytes"],
+        "offload_bytes_large": off[-1]["peak_device_bytes"],
+        "bytes_ratio": bytes_ratio,
+        "dense_bytes": dense["peak_device_bytes"],
+        "dense_num_clients": dense["num_clients"],
+        "iters_per_sec_ratio": off[0]["iters_per_sec"] / dense["iters_per_sec"],
+    }
+    payload = {
+        "config": {
+            "scenario": SCENARIO, "sweep": sweep, "k_max": K_MAX,
+            "supersteps": supersteps, "flat_tol": FLAT_TOL,
+            "smoke": smoke, "full": FULL,
+        },
+        "rows": rows,
+        "headline": headline,
+        "bench_seconds": elapsed(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {JSON_PATH}")
+    print(f"  headline: bytes {off[0]['peak_device_bytes']:,} -> "
+          f"{off[-1]['peak_device_bytes']:,} over N {sweep[0]:,} -> "
+          f"{sweep[-1]:,} (ratio {bytes_ratio:.3f})")
+
+    # the tentpole claim: device footprint is a function of k_max, not N
+    assert 1.0 / FLAT_TOL <= bytes_ratio <= FLAT_TOL, (
+        f"host-offload device bytes are not flat in N: "
+        f"{off[0]['peak_device_bytes']:,}B @ N={off[0]['num_clients']:,} vs "
+        f"{off[-1]['peak_device_bytes']:,}B @ N={off[-1]['num_clients']:,}"
+    )
+    assert all(np.isfinite(r["final_loss"]) for r in rows), rows
+    return headline
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for the CI schema/flatness gate")
+    main(smoke=ap.parse_args().smoke)

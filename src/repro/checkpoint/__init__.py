@@ -24,7 +24,15 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "flatten_with_names",
+    "host_leaf",
+    "save_leaves",
+    "load_leaves",
+]
 
 _SEP = "/"
 
@@ -36,6 +44,46 @@ def _flatten_with_names(tree: PyTree):
         name = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         out.append((name or "leaf", leaf))
     return out
+
+
+def flatten_with_names(tree: PyTree) -> list[tuple[str, Any]]:
+    """Checkpoint leaf naming: (path-name, leaf) per leaf, in tree order.
+
+    The same naming scheme the checkpoint manifest uses — consumers that
+    serialize subsets of a tree (e.g. ``repro.state.HostArrayStore``) stay
+    name-compatible with full checkpoints.
+    """
+    return _flatten_with_names(tree)
+
+
+def host_leaf(leaf) -> np.ndarray:
+    """One leaf, host-gathered in the checkpoint on-disk representation.
+
+    bfloat16 is widened to float32 exactly as ``save_checkpoint`` stores it
+    (numpy has no bf16), so round-tripping through ``save_leaves`` /
+    ``load_leaves`` matches a save/restore cycle bit for bit.
+    """
+    leaf = jnp.asarray(leaf)
+    if leaf.dtype == jnp.bfloat16:
+        leaf = leaf.astype(jnp.float32)
+    return np.asarray(jax.device_get(leaf))
+
+
+def save_leaves(path: str, named: list[tuple[str, Any]]) -> None:
+    """Serialize named leaves to one ``.npz`` record (checkpoint encoding)."""
+    arrays = {}
+    for i, (name, leaf) in enumerate(named):
+        arrays[f"{i:05d}:{name}"] = host_leaf(leaf)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_leaves(path: str) -> list[np.ndarray]:
+    """Inverse of ``save_leaves``: leaves in their original tree order."""
+    with np.load(path) as z:
+        return [z[k] for k in sorted(z.files)]
 
 
 def save_checkpoint(directory: str, state: PyTree, step: int, metadata: Optional[dict] = None):
@@ -53,14 +101,11 @@ def save_checkpoint(directory: str, state: PyTree, step: int, metadata: Optional
         "leaves": [],
     }
     for i, (name, leaf) in enumerate(named):
-        leaf = jnp.asarray(leaf)
-        if leaf.dtype == jnp.bfloat16:  # numpy has no bf16: store widened
-            leaf = leaf.astype(jnp.float32)
-        arr = np.asarray(jax.device_get(leaf))
+        arr = host_leaf(leaf)  # bf16 widened: numpy has no bf16
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"].append(
-            {"name": name, "file": fname, "shape": list(arr.shape), "dtype": str(leaf.dtype)}
+            {"name": name, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
         )
     # structure for faithful reconstruction
     treedef = jax.tree_util.tree_structure(state)

@@ -1,0 +1,317 @@
+"""Typed run configuration: one validated schema for every entry point.
+
+``make_run`` historically took a sprawling flat dict whose keys were
+implicitly defined by whichever scheduler factory popped them.  This module
+gives that surface a typed spine::
+
+    RunConfig(
+        model=ModelSpec(kind="mnist-cnn"),
+        fleet=FleetSpec(
+            profile={"kind": "bimodal-straggler", "straggler_frac": 0.25},
+            participation={"strategy": "uniform-k", "k": 2},
+            store={"kind": "host-offload", "k_max": 8},
+        ),
+        exec=ExecSpec(scheduler="round", tau1=2, rounds_per_step=4),
+        num_clients=16, num_clusters=4, seed=3,
+    )
+
+* :class:`FleetSpec` collapses the per-call ``profile=`` / ``participation=``
+  wiring PRs 3 and 5 threaded separately through every scheduler — plus the
+  new ``store`` axis (``repro.state``) — into one object that travels as a
+  unit (schedulers keep thin deprecated keyword shims).
+* :class:`ExecSpec` carries the schedule: scheduler, backend, topology,
+  protocol periods, ``rounds_per_step``; scheduler-specific extras
+  (``psi``, ``theta_max``, ...) ride in ``extras`` and still fail fast on
+  typos inside ``make_run``.
+* :class:`ModelSpec` / :class:`DataSpec` name the task; scenarios resolve to
+  a ``RunConfig``, and checkpoints embed ``RunConfig.describe()`` so a saved
+  run records the same schema it was launched with.
+
+``make_run`` accepts ``RunConfig | str | dict``; the legacy flat-dict path
+still works but emits a ``DeprecationWarning`` and round-trips through
+``RunConfig.from_dict`` / ``to_dict``, so old configs are validated by the
+same machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+__all__ = [
+    "ModelSpec",
+    "DataSpec",
+    "FleetSpec",
+    "ExecSpec",
+    "RunConfig",
+    "MODEL_KINDS",
+]
+
+
+def _model_registry() -> dict:
+    from ..models import CausalLM, CifarCNN, MnistCNN
+
+    return {
+        "mnist-cnn": lambda **kw: MnistCNN(**kw),
+        "cifar-cnn": lambda **kw: CifarCNN(**kw),
+        "causal-lm": lambda **kw: CausalLM(**kw),
+    }
+
+
+MODEL_KINDS = ("mnist-cnn", "cifar-cnn", "causal-lm")
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """What trains: a registered architecture kind or a ready model object."""
+
+    kind: Optional[str] = None
+    instance: Any = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def build(self):
+        if self.instance is not None:
+            return self.instance
+        if self.kind is None:
+            raise ValueError("ModelSpec needs a 'kind' or an 'instance'")
+        reg = _model_registry()
+        if self.kind not in reg:
+            raise KeyError(
+                f"unknown model kind {self.kind!r}; registered: {sorted(reg)}"
+            )
+        self.instance = reg[self.kind](**self.params)
+        return self.instance
+
+
+@dataclasses.dataclass
+class DataSpec:
+    """The data environment (consumed by ``repro.scenarios``, not make_run)."""
+
+    dataset: str = "mnist"            # "mnist" | "cifar" | "procedural"
+    partition: str = "label_skew"     # "iid" | "label_skew" | "dirichlet"
+    partition_params: Optional[dict] = None
+    num_samples: int = 2400
+    batch_size: int = 10
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """Who the clients are: device heterogeneity, participation, residency.
+
+    One object replaces the three separately-threaded scheduler keywords:
+
+    ==================  =====================================================
+    field               legacy keyword / key
+    ==================  =====================================================
+    ``profile``         ``profile=`` (``repro.hetero`` sampler spec/profile)
+    ``profile_seed``    ``profile_seed=``
+    ``participation``   ``participation=`` (``repro.participation`` spec)
+    ``store``           *new* — ``repro.state`` client-state store spec
+    ==================  =====================================================
+    """
+
+    profile: Any = None
+    profile_seed: Optional[int] = None
+    participation: Any = None
+    store: Any = None
+
+    def resolve_profile(self, num_clients: int):
+        """Materialize the ``DeviceProfile`` (or None) for this fleet size."""
+        if self.profile is None:
+            return None
+        from ..hetero import sample_profile
+
+        return sample_profile(
+            self.profile, num_clients,
+            seed=0 if self.profile_seed is None else self.profile_seed,
+        )
+
+    def resolve_store(self, num_clients: int):
+        from ..state import resolve_store
+
+        return resolve_store(self.store, num_clients)
+
+    def is_default(self) -> bool:
+        return (self.profile is None and self.profile_seed is None
+                and self.participation is None and self.store is None)
+
+
+@dataclasses.dataclass
+class ExecSpec:
+    """How training runs: scheduler, backend, schedule periods, fusion.
+
+    ``None`` means "use the scheduler factory's default" (the defaults
+    differ per scheduler — e.g. ``tau1`` defaults to 5 for ``sync`` and 2
+    for ``round`` — so the typed layer does not impose its own).
+    Scheduler-specific keys (``psi``, ``theta_max``, ``min_batches``,
+    ``optimizer``, ...) travel in ``extras`` and are validated by the
+    factory exactly like before: unconsumed keys raise.
+    """
+
+    scheduler: str = "sync"
+    backend: Any = None
+    topology: Any = None
+    tau1: Optional[int] = None
+    tau2: Optional[int] = None
+    alpha: Optional[int] = None
+    learning_rate: Optional[float] = None
+    rounds_per_step: Optional[int] = None
+    prefetch: Optional[bool] = None
+    latency: Any = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+_TOP_KEYS = ("num_clients", "num_clusters", "clusters", "seed")
+_FLEET_KEYS = ("profile", "profile_seed", "participation", "store")
+_EXEC_KEYS = ("scheduler", "backend", "topology", "tau1", "tau2", "alpha",
+              "learning_rate", "rounds_per_step", "prefetch", "latency")
+_DATA_KEYS = ("dataset", "partition", "partition_params", "num_samples",
+              "batch_size")
+
+
+@dataclasses.dataclass
+class RunConfig:
+    """The validated schema behind ``make_run`` (and scenario resolution).
+
+    ``from_dict`` lifts a legacy flat config into the typed form;
+    ``to_dict`` flattens back losslessly (the factories consume the flat
+    form), so dict-era configs and typed configs follow one code path.
+    """
+
+    model: ModelSpec
+    fleet: FleetSpec = dataclasses.field(default_factory=FleetSpec)
+    exec: ExecSpec = dataclasses.field(default_factory=ExecSpec)
+    data: Optional[DataSpec] = None
+    num_clients: Optional[int] = None
+    num_clusters: Optional[int] = None
+    clusters: Any = None
+    seed: int = 0
+
+    # -- dict round-trip -----------------------------------------------------
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunConfig":
+        """Lift a flat ``make_run`` dict; unknown keys land in ``exec.extras``
+        (and still fail fast in the scheduler factory if nothing pops them).
+        """
+        s = dict(d)
+        model = s.pop("model", None)
+        if isinstance(model, ModelSpec):
+            mspec = model
+        elif isinstance(model, str):
+            mspec = ModelSpec(kind=model)
+        else:
+            mspec = ModelSpec(instance=model)
+        fleet = s.pop("fleet", None)
+        if fleet is None:
+            fleet = FleetSpec(**{k: s.pop(k) for k in _FLEET_KEYS if k in s})
+        elif not isinstance(fleet, FleetSpec):
+            fleet = FleetSpec(**dict(fleet))
+        data = None
+        if any(k in s for k in _DATA_KEYS):
+            data = DataSpec(**{k: s.pop(k) for k in _DATA_KEYS if k in s})
+        ex = ExecSpec(**{k: s.pop(k) for k in _EXEC_KEYS if k in s})
+        top = {k: s.pop(k) for k in _TOP_KEYS if k in s}
+        ex.extras = s  # whatever is left is scheduler-specific (or a typo)
+        return cls(model=mspec, fleet=fleet, exec=ex, data=data, **top)
+
+    def to_dict(self) -> dict:
+        """Flatten back to the legacy ``make_run`` dict (lossless)."""
+        out: dict = {}
+        if self.model.instance is not None or self.model.kind is not None:
+            out["model"] = (
+                self.model.instance if self.model.instance is not None
+                else self.model.build()
+            )
+        for k in _TOP_KEYS:
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        for k in _FLEET_KEYS:
+            v = getattr(self.fleet, k)
+            if v is not None:
+                out[k] = v
+        out["scheduler"] = self.exec.scheduler
+        for k in _EXEC_KEYS[1:]:
+            v = getattr(self.exec, k)
+            if v is not None:
+                out[k] = v
+        if self.data is not None:
+            for k in _DATA_KEYS:
+                v = getattr(self.data, k)
+                if v is not None:
+                    out[k] = v
+        out.update(self.exec.extras)
+        return out
+
+    def scheduler_config(self) -> dict:
+        """The flat dict the scheduler factories consume: ``to_dict`` minus
+        the data-environment keys (those shape batches, not the runtime)."""
+        out = self.to_dict()
+        for k in _DATA_KEYS:
+            out.pop(k, None)
+        return out
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "RunConfig":
+        from .runtime import SCHEDULER_REGISTRY
+
+        if self.model.instance is None and self.model.kind is None:
+            raise ValueError("RunConfig.model needs a kind or an instance")
+        if self.exec.scheduler not in SCHEDULER_REGISTRY:
+            raise KeyError(
+                f"unknown scheduler {self.exec.scheduler!r}; registered: "
+                f"{sorted(SCHEDULER_REGISTRY)}"
+            )
+        for k in ("tau1", "tau2", "alpha", "rounds_per_step"):
+            v = getattr(self.exec, k)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise ValueError(f"exec.{k} must be an int >= 1, got {v!r}")
+        part = self.fleet.participation
+        if part is not None and not isinstance(part, (str, dict)) and not hasattr(
+            part, "mask"
+        ):
+            raise TypeError(
+                f"fleet.participation must be a strategy name, spec dict or "
+                f"ParticipationPlan, got {type(part).__name__}"
+            )
+        store = self.fleet.store
+        if isinstance(store, (str, dict)):
+            from ..state import STORE_REGISTRY
+
+            kind = store if isinstance(store, str) else store.get("kind")
+            if kind not in STORE_REGISTRY:
+                raise KeyError(
+                    f"unknown state store {kind!r}; registered: "
+                    f"{sorted(STORE_REGISTRY)}"
+                )
+        if self.clusters is not None and (
+            self.num_clients is not None or self.num_clusters is not None
+        ):
+            raise ValueError(
+                "pass either an explicit 'clusters' ClusterSpec or "
+                "num_clients/num_clusters, not both"
+            )
+        return self
+
+    # -- checkpoint metadata -------------------------------------------------
+    def describe(self) -> dict:
+        """JSON-safe summary for checkpoint metadata / manifests."""
+
+        def safe(v):
+            if v is None or isinstance(v, (bool, int, float, str)):
+                return v
+            if isinstance(v, dict):
+                return {str(k): safe(x) for k, x in v.items()}
+            if isinstance(v, (list, tuple)):
+                return [safe(x) for x in v]
+            return repr(v)
+
+        return {
+            "model": safe(self.model.kind or type(self.model.instance).__name__),
+            "data": None if self.data is None else safe(dataclasses.asdict(self.data)),
+            "fleet": {k: safe(getattr(self.fleet, k)) for k in _FLEET_KEYS},
+            "exec": {k: safe(getattr(self.exec, k)) for k in _EXEC_KEYS}
+            | {"extras": safe(self.exec.extras)},
+            "num_clients": self.num_clients,
+            "num_clusters": self.num_clusters,
+            "seed": self.seed,
+        }

@@ -35,6 +35,14 @@ Three pieces:
     ``next_batches(clients, count)`` (``repro.data.ClientBatcher`` does, as a
     vectorized draw); sources that only offer the legacy per-call
     ``next_batch(client)`` go through a compatible sequential shim.
+
+Under a sparse client-state store (``repro.state.HostOffloadStore``) the
+produced item is not just the batch window: the round scheduler's producer
+returns ``(stacked participant batches, staged host state rows)`` so the
+next superstep's *state* gather prefetches together with its batches — any
+host-stored row whose client is not resident in the in-flight step is read
+early, and ``transfer`` stages only the batch half to device.  The pipeline
+itself is agnostic: it double-buffers whatever the producer yields.
 """
 from __future__ import annotations
 

@@ -75,6 +75,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
@@ -82,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backends import collective_supported, resolve_backend
+from .config import FleetSpec, RunConfig
 from .latency import LatencyModel
 from .protocol import SDFEELConfig
 from .staleness import staleness_mixing_matrix
@@ -102,6 +104,24 @@ __all__ = [
     "make_run",
     "stacked_init",
 ]
+
+_UNSET = object()
+
+
+def _fleet_from_legacy(fleet: Optional[FleetSpec], owner: str, **legacy) -> FleetSpec:
+    """Fold the deprecated per-call ``profile=``/``participation=`` keywords
+    into a ``FleetSpec`` (warning once per call site); the factories pass
+    ``fleet=`` directly and never hit this path."""
+    used = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if used:
+        warnings.warn(
+            f"{owner}({'/'.join(sorted(used))}=...) keywords are deprecated; "
+            f"pass fleet=FleetSpec(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        fleet = dataclasses.replace(fleet or FleetSpec(), **used)
+    return fleet if fleet is not None else FleetSpec()
 
 
 # ---------------------------------------------------------------------------
@@ -156,20 +176,24 @@ def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
 
 def _event_time(
     latency: Optional[LatencyModel], alpha: int, event: str, profile=None,
-    participants=None,
+    participants=None, clusters=None,
 ) -> float:
     """Per-iteration wall-clock of Section V-B for one sync protocol event.
 
     With a ``DeviceProfile``, synchronous pacing is set by the slowest
     effective client and the narrowest uplink (the straggler effect);
     ``participants`` (a round's participation mask) restricts pacing to the
-    clients actually in the round — sampling's wall-clock upside.
+    clients actually in the round — sampling's wall-clock upside.  With
+    ``clusters`` the event is priced along the per-cluster critical path
+    (each edge server waits for *its own* slowest member + narrowest uplink)
+    instead of the fleet-global envelope — see
+    ``FleetTiming.sync_event_time``.
     """
     if profile is not None:
         from ..hetero import FleetTiming
 
         return FleetTiming(profile, latency).sync_event_time(
-            event, alpha, participants=participants
+            event, alpha, participants=participants, clusters=clusters
         )
     if latency is None:
         return 0.0
@@ -179,6 +203,20 @@ def _event_time(
     if event == "inter":
         t += alpha * latency.t_comm_server_server()
     return t
+
+
+def _participant_batches(batch_source, k: int, res) -> PyTree:
+    """Iteration ``k``'s batches for the resident slots only.
+
+    Sources advertising ``supports_clients`` (e.g. procedural scenario
+    sources) produce just the requested rows — O(k_max) per step, the only
+    batching path that scales to million-client fleets.  Legacy sources
+    produce the full (N, ...) stack host-side and are sliced.
+    """
+    if getattr(batch_source, "supports_clients", False):
+        return batch_source(k, clients=res.clients)
+    full = batch_source(k)
+    return jax.tree.map(lambda x: np.asarray(x)[res.clients], full)
 
 
 # ---------------------------------------------------------------------------
@@ -237,54 +275,78 @@ class SyncScheduler:
     with the in-flight device step (``prefetch=False`` restores the
     host-synchronous seed behavior — only useful as a benchmark baseline).
 
-    ``participation`` (a ``repro.participation`` spec/plan) samples who
-    aggregates each round (one round = ``tau1 * tau2`` iterations): the
-    round's renormalized weight vector enters the fused step as a traced
-    operand, and — with a ``DeviceProfile`` — the round's wall-clock is
-    paced by its *participants* only.  ``None``/``"full"`` keeps the exact
-    legacy code path.
+    ``fleet`` (a ``repro.core.config.FleetSpec``) carries the who-axis as one
+    object: device ``profile``, ``participation`` plan spec, and the client
+    ``store`` (``repro.state``).  Participation samples who aggregates each
+    round (one round = ``tau1 * tau2`` iterations): the round's renormalized
+    weight vector enters the fused step as a traced operand, and — with a
+    ``DeviceProfile`` — the round's wall-clock is paced by its
+    *participants* only, along each cluster's own critical path.
+    ``None``/``"full"`` keeps the exact legacy code path.
+
+    With a ``host-offload`` store the scheduler runs on a fixed ``(k_max,
+    ...)`` participant buffer: gathered at each round start, stepped through
+    the same fused programs (built over the store's sub-fleet), scattered
+    back at the round's inter-cluster boundary.  The legacy ``profile=`` /
+    ``participation=`` keywords still work but emit a ``DeprecationWarning``.
     """
 
     name = "sync"
 
     def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
-                 backend=None, profile=None, prefetch: bool = True,
-                 participation=None):
+                 backend=None, profile=_UNSET, prefetch: bool = True,
+                 participation=_UNSET, fleet: Optional[FleetSpec] = None):
         self.cfg = cfg
         self.latency = latency
-        self.profile = profile
+        self.fleet = _fleet_from_legacy(
+            fleet, "SyncScheduler", profile=profile, participation=participation
+        )
+        self.profile = self.fleet.resolve_profile(cfg.clusters.num_clients)
         self.prefetch = prefetch
         self.params: PyTree = None
         self._backend_spec = backend
-        self._participation_spec = participation
         self.plan = None
+        self.store = None
         self._pipeline = None
         self._pipeline_src = None
         self._round_cache = None  # (round, weights jnp, effective mask np)
         # §V-B per-event wall-clock depends only on construction args — price
         # each event kind once instead of re-summing every step
         self._event_times = {
-            e: _event_time(latency, cfg.alpha, e, profile)
+            e: _event_time(latency, cfg.alpha, e, self.profile,
+                           clusters=cfg.clusters)
             for e in ("local", "intra", "inter")
         }
 
     def bind(self, model, seed: int) -> None:
         cfg = self.cfg
         self.model = model
-        self.params = stacked_init(model, cfg.clusters.num_clients, seed)
-        self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
-        spec = self._backend_spec
-        if spec is None:
-            spec = _legacy_impl_backend(cfg.aggregation_impl, cfg.clusters, cfg.P())
-        self.backend = resolve_backend(spec, cfg.clusters, cfg.P(), cfg.alpha)
+        self.store = self.fleet.resolve_store(cfg.clusters.num_clients)
         from ..participation import resolve_plan
 
         self.plan = resolve_plan(
-            self._participation_spec, cfg.clusters, profile=self.profile,
+            self.fleet.participation, cfg.clusters, profile=self.profile,
             seed=seed,
         )
         # "full" routes through the legacy static-weight step: bit-identical
         self._sampling = self.plan is not None and not self.plan.is_full
+        self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
+        if self.store.resident:
+            self.params = stacked_init(model, cfg.clusters.num_clients, seed)
+            self.store.attach(self)
+            agg_clusters = cfg.clusters
+        else:
+            # fixed (k_max, ...) participant buffer; the aggregation runs
+            # over the store's sub-fleet (same clusters, slot-sized)
+            self.store.bind(cfg.clusters, model, seed)
+            self._buffer = None
+            self._buf_round = None
+            self._res = None
+            agg_clusters = self.store.sub_clusters
+        spec = self._backend_spec
+        if spec is None:
+            spec = _legacy_impl_backend(cfg.aggregation_impl, agg_clusters, cfg.P())
+        self.backend = resolve_backend(spec, agg_clusters, cfg.P(), cfg.alpha)
         lr = cfg.learning_rate
 
         def local_sgd(params, batch):
@@ -317,6 +379,9 @@ class SyncScheduler:
         self._global_model = jax.jit(global_model)
 
     # -- participation plumbing ----------------------------------------------
+    def _round_of(self, k: int) -> int:
+        return (k - 1) // (self.cfg.tau1 * self.cfg.tau2)
+
     def _round_participation(self, k: int):
         """(weights jnp, effective mask np, per-event dt dict) of iteration
         ``k``'s round.
@@ -327,38 +392,82 @@ class SyncScheduler:
         (at most three entries) and discarded at the round boundary, so the
         masked pricing costs one ``FleetTiming`` reduction per event kind
         per round, not per iteration.
+
+        Offloaded stores slice the round's weight vector onto the resident
+        slots (padding slots weigh exactly 0) and pace by the residents.
         """
-        r = (k - 1) // (self.cfg.tau1 * self.cfg.tau2)
+        r = self._round_of(k)
         if self._round_cache is None or self._round_cache[0] != r:
-            self._round_cache = (
-                r,
-                jnp.asarray(self.plan.weights(r), jnp.float32),
-                self.plan.effective_mask(r),
-                {},
-            )
+            if self.store.resident:
+                weights = self.plan.weights(r)
+                mask = self.plan.effective_mask(r)
+            else:
+                from ..state import sub_weights
+
+                res = self._residency_for_round(r)
+                weights = sub_weights(self.plan.weights(r), res)
+                mask = res.participant_mask(self.cfg.clusters.num_clients)
+            self._round_cache = (r, jnp.asarray(weights, jnp.float32), mask, {})
         return self._round_cache[1], self._round_cache[2], self._round_cache[3]
+
+    def _masked_event_time(self, event: str, mask, times: dict) -> float:
+        if self.profile is None:
+            return self._event_times[event]
+        if event not in times:
+            times[event] = _event_time(
+                self.latency, self.cfg.alpha, event, self.profile,
+                participants=mask, clusters=self.cfg.clusters,
+            )
+        return times[event]
+
+    # -- residency (host-offload stores) -------------------------------------
+    def _residency_for_round(self, r: int):
+        """Deterministic in ``r`` — prefetch and execution must agree."""
+        if self._sampling:
+            return self.store.residency(self.plan.mask(r))
+        return self.store.residency()
 
     # -- one protocol iteration (local + scheduled aggregation) -------------
     def _apply(self, k: int, staged_batch) -> tuple[str, float]:
         event = self.cfg.event_at(k)
+        if not self.store.resident:
+            return self._apply_offload(k, event, staged_batch)
         if self._sampling:
             weights, mask, times = self._round_participation(k)
             self.params = self._step_fns[event](self.params, staged_batch, weights)
-            if self.profile is None:
-                dt = self._event_times[event]
-            else:
-                if event not in times:
-                    times[event] = _event_time(
-                        self.latency, self.cfg.alpha, event, self.profile,
-                        participants=mask,
-                    )
-                dt = times[event]
+            dt = self._masked_event_time(event, mask, times)
         else:
             self.params = self._step_fns[event](self.params, staged_batch)
             dt = self._event_times[event]
         return event, dt
 
+    def _apply_offload(self, k: int, event: str, staged_batch) -> tuple[str, float]:
+        r = self._round_of(k)
+        if self._buffer is None or self._buf_round != r:
+            self._res = self._residency_for_round(r)
+            self._buffer = self.store.gather(self._res)
+            self._buf_round = r
+        if self._sampling:
+            weights, mask, times = self._round_participation(k)
+            self._buffer = self._step_fns[event](self._buffer, staged_batch, weights)
+            dt = self._masked_event_time(event, mask, times)
+        else:
+            self._buffer = self._step_fns[event](self._buffer, staged_batch)
+            dt = self._event_times[event]
+        if event == "inter":
+            # round boundary: every resident's state is its cluster's
+            # post-gossip aggregate — fully representable by the store
+            self.store.scatter(self._res, self._buffer)
+            self._buffer = None
+        return event, dt
+
     def advance(self, k: int, stacked_batch: dict) -> str:
+        if not self.store.resident:
+            r = self._round_of(k)
+            res = self._residency_for_round(r)
+            stacked_batch = jax.tree.map(
+                lambda x: np.asarray(x)[res.clients], stacked_batch
+            )
         return self._apply(k, jax.tree.map(jnp.asarray, stacked_batch))[0]
 
     def iteration_time(self, event: str) -> float:
@@ -368,11 +477,18 @@ class SyncScheduler:
     def _next_batch(self, k: int, batch_source) -> PyTree:
         from .pipeline import BatchPipeline, device_batch
 
+        if self.store.resident:
+            producer = batch_source
+        else:
+            def producer(i: int) -> PyTree:
+                res = self._residency_for_round(self._round_of(i))
+                return _participant_batches(batch_source, i, res)
+
         if not self.prefetch:
-            return device_batch(batch_source(k))
+            return device_batch(producer(k))
         if (self._pipeline is None or self._pipeline_src is not batch_source
                 or self._pipeline.next_index != k):
-            self._pipeline = BatchPipeline(batch_source, start=k)
+            self._pipeline = BatchPipeline(producer, start=k)
             self._pipeline_src = batch_source
         return self._pipeline.get(k)
 
@@ -382,7 +498,12 @@ class SyncScheduler:
 
     def global_params(self) -> PyTree:
         """Consensus-phase output: sum_d m~_d y_K^(d) == sum_i m_i w_K^(i)."""
-        return self._global_model(self.params)
+        if self.store.resident:
+            return self._global_model(self.params)
+        if self._buffer is None:
+            return self.store.global_params()
+        # mid-round: residents' live buffer + the store's cold majority
+        return self.store.global_params(resident=self._res, buffer=self._buffer)
 
 
 # ---------------------------------------------------------------------------
@@ -405,32 +526,47 @@ class RoundScheduler:
     computes, and ``StepEvent.losses`` stays a device array so the host never
     blocks on metrics between supersteps (materialize with ``float``/
     ``np.asarray`` at logging boundaries).
+
+    ``fleet`` (a ``FleetSpec``) carries profile/participation/store as one
+    object (the old ``profile=``/``participation=`` keywords warn).  With a
+    ``host-offload`` store the superstep engine is compiled over the fixed
+    ``(k_max, ...)`` slot buffer: one participation draw per superstep picks
+    the residents, their batches and stageable host rows prefetch together,
+    and gather -> superstep -> scatter bounds device memory by ``k_max``
+    regardless of ``num_clients``.  Under offload, stateful optimizers reset
+    between supersteps (plain SGD — the paper's setting — is unaffected).
     """
 
     name = "round"
 
     def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
-                 backend=None, profile=None, rounds_per_step: int = 1,
-                 prefetch: bool = True, participation=None):
+                 backend=None, profile=_UNSET, rounds_per_step: int = 1,
+                 prefetch: bool = True, participation=_UNSET,
+                 fleet: Optional[FleetSpec] = None):
         if rounds_per_step < 1:
             raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
         self.fl = fl
         self.optimizer = optimizer
         self.latency = latency
-        self.profile = profile
+        self.fleet = _fleet_from_legacy(
+            fleet, "RoundScheduler", profile=profile, participation=participation
+        )
+        self.profile = self.fleet.resolve_profile(fl.num_clients)
         self.rounds_per_step = rounds_per_step
         self.prefetch = prefetch
         self.params: PyTree = None
         self.opt_state: PyTree = None
         self._backend_spec = backend
-        self._participation_spec = participation
         self.plan = None
+        self.store = None
         self._pipeline = None
         self._pipeline_src = None
+        self._res_cache = None  # (step k, Residency) — prefetch must agree
         self._proto = fl.protocol()
         # §V-B wall-clock of one full round, priced once per event schedule
         self._round_time = sum(
-            _event_time(latency, fl.alpha, self._proto.event_at(i), profile)
+            _event_time(latency, fl.alpha, self._proto.event_at(i), self.profile,
+                        clusters=self._proto.clusters)
             for i in range(1, self.iterations_per_round + 1)
         )
 
@@ -459,27 +595,41 @@ class RoundScheduler:
         fl = self.fl
         opt = self.optimizer or optim.sgd(fl.learning_rate)
         self.optimizer = opt
-        self.params = stacked_init(model, fl.num_clients, seed)
-        self.opt_state = opt.init(self.params)
+        self.store = self.fleet.resolve_store(fl.num_clients)
+        from ..participation import resolve_plan
+
+        self.plan = resolve_plan(
+            self.fleet.participation, self._proto.clusters,
+            profile=self.profile, seed=seed,
+        )
+        self._sampling = self.plan is not None and not self.plan.is_full
+        if self.store.resident:
+            self.params = stacked_init(model, fl.num_clients, seed)
+            self.opt_state = opt.init(self.params)
+            self.store.attach(self)
+            engine_fl = fl
+            agg_clusters = self._proto.clusters
+        else:
+            # superstep engine compiled over the store's (k_max, ...) slots;
+            # the per-slot weights mask pads to exactly 0, so the engine
+            # always runs its participation variant
+            self.store.bind(self._proto.clusters, model, seed)
+            engine_fl = dataclasses.replace(fl, num_clients=self.store.k_max)
+            agg_clusters = self.store.sub_clusters
+            self._full_w = self._proto.clusters.m_hat()
         spec = self._backend_spec
         if spec is None:
             # the compiled round engine historically always used dense;
             # honor impl="gossip" only where the collective path is valid
-            spec = _legacy_impl_backend(fl.impl, self._proto.clusters, self._proto.P())
+            spec = _legacy_impl_backend(fl.impl, agg_clusters, self._proto.P())
         self.backend = resolve_backend(
-            spec, self._proto.clusters, self._proto.P(), fl.alpha
+            spec, agg_clusters, self._proto.P(), fl.alpha
         )
-        from ..participation import resolve_plan
-
-        self.plan = resolve_plan(
-            self._participation_spec, self._proto.clusters,
-            profile=self.profile, seed=seed,
-        )
-        self._sampling = self.plan is not None and not self.plan.is_full
         self._round_step = jax.jit(
-            build_fl_round_step(model, opt, fl, backend=self.backend,
+            build_fl_round_step(model, opt, engine_fl, backend=self.backend,
                                 rounds_per_step=self.rounds_per_step,
-                                participation=self._sampling),
+                                participation=(self._sampling
+                                               or not self.store.resident)),
             donate_argnums=(0, 1),
         )
 
@@ -497,9 +647,14 @@ class RoundScheduler:
         if self.profile is None:
             return self._round_time
         mask = self.plan.effective_mask(r)
+        return self._mask_round_time(mask)
+
+    def _mask_round_time(self, mask) -> float:
+        """Sum one round's schedule priced by ``mask``'s members — three
+        ``FleetTiming`` reductions, not ``tau1 * tau2``."""
         times = {
             e: _event_time(self.latency, self.fl.alpha, e, self.profile,
-                           participants=mask)
+                           participants=mask, clusters=self._proto.clusters)
             for e in ("local", "intra", "inter")
         }
         return sum(
@@ -507,23 +662,89 @@ class RoundScheduler:
             for i in range(1, self.iterations_per_round + 1)
         )
 
-    def _superstep_batches(self, k: int, batch_source) -> PyTree:
+    # -- residency (host-offload stores) -------------------------------------
+    def _residency_for_step(self, k: int):
+        """Superstep ``k``'s slot assignment — one participation draw per
+        superstep (round ``(k-1)*R``'s mask covers all ``R`` scanned rounds),
+        deterministic in ``k`` so prefetch and execution agree."""
+        if self._res_cache is not None and self._res_cache[0] == k:
+            return self._res_cache[1]
+        if self._sampling:
+            res = self.store.residency(self.plan.mask((k - 1) * self.rounds_per_step))
+        else:
+            res = self.store.residency()
+        self._res_cache = (k, res)
+        return res
+
+    def _superstep_batches(self, k: int, batch_source):
         from .pipeline import BatchPipeline, device_batch, stack_window
 
         ips = self.iterations_per_step
 
-        def producer(step_idx: int) -> PyTree:
-            return stack_window(batch_source, (step_idx - 1) * ips + 1, ips)
+        if self.store.resident:
+            def producer(step_idx: int) -> PyTree:
+                return stack_window(batch_source, (step_idx - 1) * ips + 1, ips)
+
+            transfer = device_batch
+        else:
+            # participant batches and stageable host state rows prefetch
+            # together, while the previous superstep still runs on device
+            def producer(step_idx: int):
+                res = self._residency_for_step(step_idx)
+                window = stack_window(
+                    lambda i: _participant_batches(batch_source, i, res),
+                    (step_idx - 1) * ips + 1, ips,
+                )
+                in_flight = (
+                    self._residency_for_step(step_idx - 1) if step_idx > 1
+                    else None
+                )
+                return window, self.store.stage(res, in_flight=in_flight)
+
+            def transfer(item):
+                window, staged = item
+                return device_batch(window), staged
 
         if not self.prefetch:
-            return device_batch(producer(k))
+            return transfer(producer(k))
         if (self._pipeline is None or self._pipeline_src is not batch_source
                 or self._pipeline.next_index != k):
-            self._pipeline = BatchPipeline(producer, start=k)
+            self._pipeline = BatchPipeline(producer, start=k, transfer=transfer)
             self._pipeline_src = batch_source
         return self._pipeline.get(k)
 
+    def _offload_step(self, k: int, batch_source) -> StepEvent:
+        from ..state import sub_weights
+
+        stacked, staged = self._superstep_batches(k, batch_source)
+        res = self._residency_for_step(k)
+        buf = self.store.gather(res, staged)
+        # sgd's state is () so per-superstep re-init is free; stateful
+        # optimizers reset between supersteps under offload (documented)
+        opt_buf = self.optimizer.init(buf)
+        r0 = (k - 1) * self.rounds_per_step
+        w_full = self.plan.weights(r0) if self._sampling else self._full_w
+        weights = jnp.asarray(
+            np.tile(sub_weights(w_full, res), (self.rounds_per_step, 1)),
+            jnp.float32,
+        )
+        buf, _, losses = self._round_step(buf, opt_buf, stacked, weights)
+        self.store.scatter(res, buf)
+        if self.profile is None:
+            dt = self.rounds_per_step * self._round_time
+        else:
+            mask = res.participant_mask(self.fl.num_clients)
+            dt = self.rounds_per_step * self._mask_round_time(mask)
+        return StepEvent(
+            kind="round",
+            iteration=k * self.iterations_per_step,
+            dt=dt,
+            losses=losses,
+        )
+
     def step(self, k: int, batch_source) -> StepEvent:
+        if not self.store.resident:
+            return self._offload_step(k, batch_source)
         stacked = self._superstep_batches(k, batch_source)
         if self._sampling:
             # rounds (k-1)*R .. k*R-1, one weight vector per scanned round —
@@ -551,6 +772,9 @@ class RoundScheduler:
         )
 
     def global_params(self) -> PyTree:
+        if not self.store.resident:
+            # supersteps scatter before returning, so the store is the truth
+            return self.store.global_params()
         m = jnp.asarray(self._proto.clusters.m(), jnp.float32)
         return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), self.params)
 
@@ -589,15 +813,20 @@ class AsyncScheduler:
     name = "async"
 
     def __init__(self, cfg, backend=None, prefetch: bool = True,
-                 participation=None):
+                 participation=_UNSET, fleet: Optional[FleetSpec] = None):
         self.cfg = cfg
         self.prefetch = prefetch
         self._backend_spec = backend
-        self._participation_spec = participation
+        self.fleet = _fleet_from_legacy(
+            fleet, "AsyncScheduler", participation=participation
+        )
         self.plan = None
+        self.store = None
         self._prefetched = None
 
     def bind(self, model, seed: int) -> None:
+        from .protocol import ClusterSpec
+
         cfg = self.cfg
         self.model = model
         self.theta = cfg.theta()
@@ -610,8 +839,32 @@ class AsyncScheduler:
                 cfg.clusters, seed=seed
             )
         d = cfg.clusters.num_clusters
-        # per-cluster models, stacked (D, ...)
+        # per-cluster models, stacked (D, ...).  The async device state is
+        # already cluster-sized, so a host-offload store wraps the y-stack as
+        # one pseudo "client" per cluster (mass m~_d) in identity residency —
+        # same store API, no residency smaller than D to exploit.
+        self.store = self.fleet.resolve_store(d)
         self.y = stacked_init(model, d, seed)
+        if self.store.resident:
+            self.store.attach(self, "y")
+            self._store_res = None
+        else:
+            if self.store.k_max not in (None, d):
+                raise ValueError(
+                    f"async state is per-cluster: a host-offload store must "
+                    f"cover all {d} clusters (k_max in (None, {d})), got "
+                    f"k_max={self.store.k_max}"
+                )
+            sizes = np.zeros(d)
+            np.add.at(
+                sizes,
+                np.asarray(cfg.clusters.assignments, dtype=np.int64),
+                np.asarray(cfg.clusters.data_sizes, dtype=np.float64),
+            )
+            pseudo = ClusterSpec(d, tuple(range(d)), tuple(float(x) for x in sizes))
+            self.store.bind(pseudo, model, seed)
+            self._store_res = self.store.residency()
+            self.y = self.store.gather(self._store_res)
         self.t = 0
         self.last_update = np.zeros(d, dtype=np.int64)  # t'(d)
         self.clock = 0.0
@@ -634,7 +887,7 @@ class AsyncScheduler:
         from ..participation import resolve_plan
 
         self.plan = resolve_plan(
-            self._participation_spec, cfg.clusters, profile=cfg.profile,
+            self.fleet.participation, cfg.clusters, profile=cfg.profile,
             seed=seed,
         )
         self._sampling = self.plan is not None and not self.plan.is_full
@@ -745,6 +998,10 @@ class AsyncScheduler:
 
             self.t += 1
             self.last_update[d] = self.t
+            if not self.store.resident:
+                # device-side take on the identity map — keeps the store's
+                # persistent cluster stack in lockstep with the live y
+                self.store.scatter(self._store_res, self.y)
         # Next firing: service time, stretched by dropout retries when the
         # profile says some of the cluster's devices are flaky.
         service = self.iter_times[d]
@@ -762,6 +1019,8 @@ class AsyncScheduler:
         )
 
     def global_params(self) -> PyTree:
+        if not self.store.resident:
+            return self.store.global_params()
         return self._global(self.y)
 
 
@@ -882,26 +1141,31 @@ def _as_clusters(s: dict):
     return ClusterSpec.uniform(s.pop("num_clients"), s.pop("num_clusters"))
 
 
-def _as_profile(s: dict, num_clients: int):
-    """Resolve the scenario's ``"profile"`` key into a DeviceProfile (or None).
+def _as_fleet(s: dict) -> FleetSpec:
+    """Pop the who-axis keys into one ``FleetSpec``.
 
-    Accepts a registered sampler name ("bimodal-straggler", ...), a
-    ``{"kind": ..., **params}`` dict, or a ready ``DeviceProfile``;
-    ``"profile_seed"`` seeds the sampler.
+    Accepts either a ready ``"fleet"`` entry (``FleetSpec`` or kwargs dict)
+    or the flat ``profile``/``profile_seed``/``participation``/``store``
+    keys that ``RunConfig.to_dict`` emits.
     """
-    spec = s.pop("profile", None)
-    seed = s.pop("profile_seed", 0)
-    if spec is None:
-        return None
-    from ..hetero import sample_profile
-
-    return sample_profile(spec, num_clients, seed=seed)
+    fleet = s.pop("fleet", None)
+    if fleet is not None:
+        if not isinstance(fleet, FleetSpec):
+            fleet = FleetSpec(**dict(fleet))
+        return fleet
+    return FleetSpec(
+        profile=s.pop("profile", None),
+        profile_seed=s.pop("profile_seed", None),
+        participation=s.pop("participation", None),
+        store=s.pop("store", None),
+    )
 
 
 @register_scheduler("sync")
 def _make_sync(s: dict) -> SyncScheduler:
     clusters = _as_clusters(s)
     topology = _as_topology(s.pop("topology", "ring"), clusters.num_clusters)
+    fleet = _as_fleet(s)
     cfg = SDFEELConfig(
         clusters=clusters,
         topology=topology,
@@ -913,9 +1177,7 @@ def _make_sync(s: dict) -> SyncScheduler:
     )
     return SyncScheduler(
         cfg, latency=s.pop("latency", None), backend=s.pop("backend", None),
-        profile=_as_profile(s, clusters.num_clients),
-        prefetch=s.pop("prefetch", True),
-        participation=s.pop("participation", None),
+        prefetch=s.pop("prefetch", True), fleet=fleet,
     )
 
 
@@ -923,6 +1185,7 @@ def _make_sync(s: dict) -> SyncScheduler:
 def _make_round(s: dict) -> RoundScheduler:
     from .sdfeel import FLSpec
 
+    fleet = _as_fleet(s)
     fl = s.pop("fl", None)
     if fl is None:
         fl = FLSpec(
@@ -937,10 +1200,9 @@ def _make_round(s: dict) -> RoundScheduler:
         )
     return RoundScheduler(
         fl, optimizer=s.pop("optimizer", None), latency=s.pop("latency", None),
-        backend=s.pop("backend", None), profile=_as_profile(s, fl.num_clients),
+        backend=s.pop("backend", None),
         rounds_per_step=s.pop("rounds_per_step", 1),
-        prefetch=s.pop("prefetch", True),
-        participation=s.pop("participation", None),
+        prefetch=s.pop("prefetch", True), fleet=fleet,
     )
 
 
@@ -951,7 +1213,8 @@ def _make_async(s: dict) -> AsyncScheduler:
 
     clusters = _as_clusters(s)
     topology = _as_topology(s.pop("topology", "ring"), clusters.num_clusters)
-    profile = _as_profile(s, clusters.num_clients)
+    fleet = _as_fleet(s)
+    profile = fleet.resolve_profile(clusters.num_clients)
     speeds = s.pop("speeds", None)
     if speeds is None and profile is None:
         speeds = make_speeds(
@@ -980,36 +1243,52 @@ def _make_async(s: dict) -> AsyncScheduler:
     )
     return AsyncScheduler(
         cfg, backend=s.pop("backend", None), prefetch=s.pop("prefetch", True),
-        participation=s.pop("participation", None),
+        fleet=fleet,
     )
 
 
 def make_run(scenario) -> FederationRuntime:
-    """Build a ``FederationRuntime`` from a flat scenario config dict.
+    """Build a ``FederationRuntime`` from a run configuration.
 
-    Required keys: ``model`` plus whatever the chosen ``scheduler`` factory
-    needs (see the registered factories above).  Common keys: ``scheduler``
-    (default "sync"), ``seed``.  Unconsumed keys raise, so typos fail fast.
+    Accepts, in order of preference:
 
-    Named scenarios from ``repro.scenarios`` resolve here too: pass the name
-    directly (``make_run("straggler-bimodal-async")``) or a dict with a
-    ``"scenario"`` key whose remaining entries override the registered
-    config (e.g. ``{"scenario": "mnist-noniid-ring", "num_clients": 8}``).
+    * a typed :class:`repro.core.config.RunConfig` (validated, one schema
+      shared with scenarios, ``launch/train.py`` and checkpoints);
+    * a scenario *name* (``make_run("straggler-bimodal-async")``) or a dict
+      with a ``"scenario"`` key whose remaining entries override the
+      registered config — resolved via ``repro.scenarios``;
+    * a legacy flat config dict — still works, but emits a
+      ``DeprecationWarning`` and round-trips through
+      ``RunConfig.from_dict`` / ``to_dict`` so it is validated by the same
+      machinery as the typed path.
+
+    Unconsumed keys raise, so typos fail fast.
     """
-    if isinstance(scenario, str):
-        scenario = {"scenario": scenario}
-    s = dict(scenario)
-    named = s.pop("scenario", None)
-    if named is not None:
-        from ..scenarios import get_scenario
+    if isinstance(scenario, RunConfig):
+        rc = scenario
+    else:
+        if isinstance(scenario, str):
+            scenario = {"scenario": scenario}
+        s = dict(scenario)
+        named = s.pop("scenario", None)
+        if named is not None:
+            from ..scenarios import get_scenario
 
-        s = get_scenario(named).config(**s)
+            s = get_scenario(named).config(**s)
+        else:
+            warnings.warn(
+                "make_run(<flat dict>) is deprecated; pass a "
+                "repro.core.config.RunConfig (this dict was lifted through "
+                "RunConfig.from_dict and validated on the same path)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        rc = RunConfig.from_dict(s)
+    rc.validate()
+    s = rc.scheduler_config()
     name = s.pop("scheduler", "sync")
-    if name not in SCHEDULER_REGISTRY:
-        raise KeyError(
-            f"unknown scheduler {name!r}; registered: {sorted(SCHEDULER_REGISTRY)}"
-        )
-    model = s.pop("model")
+    s.pop("model", None)
+    model = rc.model.build()
     seed = s.pop("seed", 0)
     sched = SCHEDULER_REGISTRY[name](s)
     if s:

@@ -1,6 +1,6 @@
 from .synthetic import SyntheticClassification, SyntheticLM, mnist_like, cifar_like
 from .partition import dirichlet_partition, skewed_label_partition, iid_partition
-from .loader import FederatedDataset, ClientBatcher
+from .loader import FederatedDataset, ClientBatcher, ProceduralFederated
 
 __all__ = [
     "SyntheticClassification",
@@ -12,4 +12,5 @@ __all__ = [
     "iid_partition",
     "FederatedDataset",
     "ClientBatcher",
+    "ProceduralFederated",
 ]

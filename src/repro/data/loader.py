@@ -7,7 +7,7 @@ import numpy as np
 
 from .synthetic import SyntheticClassification
 
-__all__ = ["FederatedDataset", "ClientBatcher"]
+__all__ = ["FederatedDataset", "ClientBatcher", "ProceduralFederated"]
 
 
 @dataclasses.dataclass
@@ -24,10 +24,20 @@ class FederatedDataset:
     def data_sizes(self) -> tuple[float, ...]:
         return tuple(float(len(p)) for p in self.parts)
 
-    def stacked_batch(self, batch_size: int, rng: np.random.Generator) -> dict:
-        """One mini-batch per client, stacked: x (C, b, ...), y (C, b)."""
+    def stacked_batch(self, batch_size: int, rng: np.random.Generator,
+                      clients=None) -> dict:
+        """One mini-batch per client, stacked: x (C, b, ...), y (C, b).
+
+        ``clients`` restricts (and orders) the stacked rows to the given
+        fleet indices — the sparse-residency path draws only the round's
+        participants instead of materializing all C rows.  Note the rng
+        stream advances once per *returned* row, so sliced and full draws
+        are different streams.
+        """
+        parts = (self.parts if clients is None
+                 else [self.parts[int(c)] for c in clients])
         xs, ys = [], []
-        for p in self.parts:
+        for p in parts:
             idx = p[rng.integers(0, len(p), size=batch_size)]
             xs.append(self.data.x[idx])
             ys.append(self.data.y[idx])
@@ -80,3 +90,85 @@ class ClientBatcher:
             xs.append(b["x"])
             ys.append(b["y"])
         return {"x": np.stack(xs), "y": np.stack(ys)}
+
+
+class ProceduralFederated:
+    """On-demand federated data for fleets too large to materialize.
+
+    Nothing is stored per client: batch ``(client c, iteration k)`` is a pure
+    function of ``(seed, c, k)``, so any subset of clients can be drawn for
+    any iteration, in any order, any number of times — exactly the contract
+    sparse-residency prefetch needs (``supports_clients`` advertises the
+    ``clients=`` keyword to ``repro.core.runtime``).
+
+    The task is class-conditional Gaussian images (one prototype per class,
+    drawn once from ``seed``) under FedAvg-style label skew: client ``c``
+    only ever sees ``classes_per_client`` consecutive classes starting at a
+    per-client hash, so clients are statistically heterogeneous without any
+    per-client state.
+    """
+
+    supports_clients = True
+
+    def __init__(self, num_clients: int, batch_size: int = 4,
+                 num_classes: int = 10, shape: tuple = (28, 28, 1),
+                 classes_per_client: int = 2, seed: int = 0):
+        self.num_clients = int(num_clients)
+        self.batch_size = int(batch_size)
+        self.num_classes = int(num_classes)
+        self.shape = tuple(shape)
+        self.classes_per_client = int(classes_per_client)
+        self.seed = int(seed)
+        rng = np.random.default_rng([self.seed, 0x9E3779B9])
+        self.prototypes = rng.normal(size=(num_classes,) + self.shape).astype(
+            np.float32
+        )
+        self._counters: dict[int, int] = {}
+
+    def data_sizes(self) -> tuple[float, ...]:
+        return tuple(1.0 for _ in range(self.num_clients))
+
+    def _client_batch(self, c: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(
+            [self.seed & 0xFFFFFFFF, int(c) & 0xFFFFFFFF, int(k) & 0xFFFFFFFF]
+        )
+        lo = (int(c) * 2654435761 % self.num_classes)
+        ys = (lo + rng.integers(0, self.classes_per_client,
+                                size=self.batch_size)) % self.num_classes
+        xs = self.prototypes[ys] + 0.25 * rng.normal(
+            size=(self.batch_size,) + self.shape
+        ).astype(np.float32)
+        return xs.astype(np.float32), ys.astype(np.int32)
+
+    def __call__(self, k: int, clients=None) -> dict:
+        cs = (range(self.num_clients) if clients is None
+              else [int(c) for c in np.asarray(clients)])
+        xs, ys = zip(*(self._client_batch(c, k) for c in cs))
+        return {"x": np.stack(xs), "y": np.stack(ys)}
+
+    def stacked_batch(self, batch_size: int, rng=None, clients=None) -> dict:
+        """``FederatedDataset``-shaped alias; the draw index comes from the
+        rng when given (one integer per call) so repeated calls differ."""
+        k = int(rng.integers(0, 2**31 - 1)) if rng is not None else 0
+        if batch_size != self.batch_size:
+            raise ValueError(
+                f"ProceduralFederated is fixed at batch_size="
+                f"{self.batch_size}, got {batch_size}"
+            )
+        return self(k, clients=clients)
+
+    def next_batch(self, client: int) -> dict:
+        """Async per-client contract: each call advances that client's stream."""
+        c = int(client)
+        k = self._counters.get(c, 0)
+        self._counters[c] = k + 1
+        xs, ys = self._client_batch(c, k)
+        return {"x": xs, "y": ys}
+
+    def eval_batch(self, max_samples: int = 512) -> dict:
+        rng = np.random.default_rng([self.seed, 0xE7A1])
+        ys = rng.integers(0, self.num_classes, size=max_samples)
+        xs = self.prototypes[ys] + 0.25 * rng.normal(
+            size=(max_samples,) + self.shape
+        ).astype(np.float32)
+        return {"x": xs.astype(np.float32), "y": ys.astype(np.int32)}

@@ -70,7 +70,7 @@ class FleetTiming:
 
     # -- synchronous pacing --------------------------------------------------
     def sync_event_time(
-        self, event: str, alpha: int = 1, participants=None
+        self, event: str, alpha: int = 1, participants=None, clusters=None
     ) -> float:
         """Per-iteration wall-clock of a synchronous step under this fleet.
 
@@ -87,19 +87,55 @@ class FleetTiming:
         ``effective_mask`` (empty clusters backfilled), not the raw mask, so
         clients pulled back in by the aggregation fallback are charged; a
         mask with no participants at all falls back to the full fleet.
+
+        ``clusters`` (optional ``ClusterSpec``) prices the event along the
+        per-cluster critical path: each edge server waits for *its own*
+        slowest member's compute plus *its own* narrowest participating
+        uplink, and the global step finishes when the last server does.
+        Without it the event is priced by the fleet-global worst compute
+        plus the fleet-global worst uplink — an envelope that can charge a
+        single round the slow CPU of one cluster *and* the narrow link of
+        another, quantizing every sampled round to the same straggler bound.
         """
         if self.latency is None:
             return 0.0
         eff = self.profile.effective_speeds()
         bw = self.profile.bandwidths
+        mask = None
         if participants is not None:
-            participants = np.asarray(participants, dtype=bool)
-            if participants.any():
-                eff = eff[participants]
-                bw = bw[participants]
-        t = self.latency.t_comp(float(eff.min()))
-        if event in ("intra", "inter"):
-            t += self.latency.t_comm_client_server(float(bw.min()))
+            mask = np.asarray(participants, dtype=bool)
+            if not mask.any():
+                mask = None
+        if clusters is None:
+            if mask is not None:
+                eff = eff[mask]
+                bw = bw[mask]
+            t = self.latency.t_comp(float(eff.min()))
+            if event in ("intra", "inter"):
+                t += self.latency.t_comm_client_server(float(bw.min()))
+        else:
+            assign = np.asarray(clusters.assignments, dtype=np.int64)
+            if mask is not None:
+                assign = assign[mask]
+                eff = eff[mask]
+                bw = bw[mask]
+            d = clusters.num_clusters
+            eff_min = np.full(d, np.inf)
+            np.minimum.at(eff_min, assign, eff)
+            per_cluster = self.latency.t_comp(1.0) / np.where(
+                np.isinf(eff_min), np.inf, eff_min
+            )
+            if event in ("intra", "inter"):
+                bw_min = np.full(d, np.inf)
+                np.minimum.at(bw_min, assign, bw)
+                per_cluster = per_cluster + np.where(
+                    np.isinf(bw_min), 0.0,
+                    self.latency.t_comm_client_server(1.0) / np.maximum(
+                        bw_min, 1e-300
+                    ),
+                )
+            # clusters with no participants this round contribute nothing
+            t = float(per_cluster[np.isfinite(per_cluster)].max())
         if event == "inter":
             t += alpha * self.latency.t_comm_server_server()
         return t

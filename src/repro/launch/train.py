@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.config import ExecSpec, FleetSpec, ModelSpec, RunConfig
 from repro.core.runtime import make_run
 from repro.data.synthetic import SyntheticLM
 from repro.models import CausalLM
@@ -41,6 +42,9 @@ def run_scenario(args) -> None:
     part = _participation_spec(args)
     if part is not None:
         overrides["participation"] = part
+    store = _store_spec(args)
+    if store is not None:
+        overrides["store"] = store
     # every explicitly-set flag overrides the registered config (None = unset)
     for flag, key in (("clients", "num_clients"), ("clusters", "num_clusters"),
                       ("samples", "num_samples"), ("tau1", "tau1"),
@@ -71,6 +75,18 @@ def _participation_spec(args):
     if args.participation == "uniform-k":
         return {"strategy": "uniform-k", "k": args.participation_k}
     return args.participation
+
+
+def _store_spec(args):
+    """Turn --store/--k-max into a ``repro.state`` store spec."""
+    if args.store is None:
+        return None
+    if args.store == "host-offload":
+        spec = {"kind": "host-offload"}
+        if args.k_max is not None:
+            spec["k_max"] = args.k_max
+        return spec
+    return args.store
 
 
 def main(argv=None):
@@ -107,6 +123,15 @@ def main(argv=None):
                     default=1,
                     help="clients sampled per cluster per round for "
                          "--participation uniform-k")
+    ap.add_argument("--store", default=None,
+                    choices=["dense", "host-offload"],
+                    help="client-state store (repro.state): 'dense' keeps the "
+                         "stacked (C, ...) tree on device (default), "
+                         "'host-offload' keeps only k_max resident models and "
+                         "streams the rest through host memory")
+    ap.add_argument("--k-max", dest="k_max", type=int, default=None,
+                    help="resident client-model slots for --store "
+                         "host-offload (default: one per cluster)")
     ap.add_argument("--batch", type=int, default=None, help="default 4 (LM path)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -128,23 +153,24 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = CausalLM(cfg)
-    scenario = {
-        "scheduler": "round",
-        "model": model,
-        "num_clients": args.clients,
-        "num_clusters": args.clusters,
-        "tau1": args.tau1,
-        "tau2": args.tau2,
-        "alpha": args.alpha,
-        "learning_rate": args.lr,
-        "seed": args.seed,
-        "backend": args.backend,
-        "rounds_per_step": args.rounds_per_step,
-    }
-    part = _participation_spec(args)
-    if part is not None:
-        scenario["participation"] = part
-    runtime = make_run(scenario)
+    rc = RunConfig(
+        model=ModelSpec(kind="causal-lm", instance=model),
+        fleet=FleetSpec(participation=_participation_spec(args),
+                        store=_store_spec(args)),
+        exec=ExecSpec(
+            scheduler="round",
+            backend=args.backend,
+            tau1=args.tau1,
+            tau2=args.tau2,
+            alpha=args.alpha,
+            learning_rate=args.lr,
+            rounds_per_step=args.rounds_per_step,
+        ),
+        num_clients=args.clients,
+        num_clusters=args.clusters,
+        seed=args.seed,
+    )
+    runtime = make_run(rc)
     sched = runtime.scheduler
     ipr = sched.iterations_per_round
     rps = sched.rounds_per_step
@@ -152,9 +178,16 @@ def main(argv=None):
     # whole supersteps only: the trained-round count rounds up to R-multiples
     rounds = steps * rps
 
+    resident = getattr(getattr(sched, "store", None), "resident", True)
     start_round = 0
     if args.save_dir and args.resume:
         from repro.checkpoint import latest_step, restore_checkpoint
+        if not resident:
+            raise SystemExit(
+                "--resume is not supported with --store host-offload: the "
+                "per-client state lives in the host store, not a stacked "
+                "checkpointable tree"
+            )
         if latest_step(args.save_dir) is not None:
             sched.params, manifest = restore_checkpoint(args.save_dir, sched.params)
             if (manifest.get("metadata") or {}).get("unit") == "round":
@@ -178,7 +211,12 @@ def main(argv=None):
         print(f"WARNING: checkpoint round {start_round} does not align with "
               f"--rounds-per-step {rps}; resuming from superstep {start_step} "
               f"(rounds {start_round + 1}..{start_step * rps} are skipped)")
-    n_params = sum(p.size for p in jax.tree.leaves(sched.params)) // args.clients
+    if resident:
+        n_params = sum(p.size for p in jax.tree.leaves(sched.params)) // args.clients
+    else:
+        n_params = sum(
+            p.size for p in jax.tree.leaves(sched.store.state_of(0))
+        )
     print(f"arch={cfg.name} params/client={n_params:,} clients={args.clients} "
           f"clusters={args.clusters} tau1={args.tau1} tau2={args.tau2} "
           f"alpha={args.alpha} rounds={rounds} ({rounds * ipr} iterations, "
@@ -205,8 +243,16 @@ def main(argv=None):
                   f"loss={float(ev.losses[-1]):.4f} ({time.time() - t0:.1f}s)")
         if args.save_dir and (r % args.save_every == 0 or s == steps):
             from repro.checkpoint import save_checkpoint
-            save_checkpoint(args.save_dir, sched.params, step=r,
-                            metadata={"arch": cfg.name, "unit": "round"})
+            meta = {"arch": cfg.name, "unit": "round",
+                    "run_config": rc.describe()}
+            if resident:
+                save_checkpoint(args.save_dir, sched.params, step=r,
+                                metadata=meta)
+            else:
+                # offload stores checkpoint the consensus model: the stacked
+                # per-client tree never exists on device to snapshot
+                save_checkpoint(args.save_dir, runtime.global_params(),
+                                step=r, metadata=meta | {"consensus": True})
     # consensus phase: weighted global model
     global_params = runtime.global_params()
     print("done; consensus model extracted.")

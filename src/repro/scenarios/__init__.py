@@ -46,13 +46,14 @@ class Scenario:
     name: str
     description: str
     scheduler: str                      # "sync" | "round" | "async"
-    dataset: str = "mnist"              # "mnist" | "cifar"
+    dataset: str = "mnist"              # "mnist" | "cifar" | "procedural"
     partition: str = "label_skew"       # "iid" | "label_skew" | "dirichlet"
     partition_params: Optional[dict] = None
     topology: str = "ring"
     backend: str = "auto"
     profile: Union[str, dict, None] = None   # repro.hetero sampler spec
     participation: Union[str, dict, None] = None  # repro.participation spec
+    store: Union[str, dict, None] = None     # repro.state client-state store
     num_clients: int = 20
     num_clusters: int = 4
     tau1: int = 5
@@ -70,12 +71,15 @@ class Scenario:
     def _model(self):
         from repro.models import CifarCNN, MnistCNN
 
-        return {"mnist": MnistCNN, "cifar": CifarCNN}[self.dataset]()
+        # procedural data is MNIST-shaped (28x28x1 class prototypes)
+        return {"mnist": MnistCNN, "cifar": CifarCNN,
+                "procedural": MnistCNN}[self.dataset]()
 
     def _latency(self):
         from repro.core import CIFAR_LATENCY, MNIST_LATENCY
 
-        return {"mnist": MNIST_LATENCY, "cifar": CIFAR_LATENCY}[self.dataset]
+        return {"mnist": MNIST_LATENCY, "cifar": CIFAR_LATENCY,
+                "procedural": MNIST_LATENCY}[self.dataset]
 
     def _partition(self, labels: np.ndarray, num_clients: int, seed: int):
         from repro.data import dirichlet_partition, iid_partition, skewed_label_partition
@@ -92,6 +96,18 @@ class Scenario:
     def _env(self, num_clients: int, num_samples: int, seed: int):
         from repro.data import FederatedDataset, cifar_like, mnist_like
 
+        if self.dataset == "procedural":
+            from repro.data import ProceduralFederated
+
+            # on-demand per-(client, iteration) batches — nothing
+            # materialized per client, so num_clients can be 10^6
+            ds = ProceduralFederated(
+                num_clients, batch_size=self.batch_size, seed=seed,
+                classes_per_client=(self.partition_params or {}).get(
+                    "classes_per_client", 2
+                ),
+            )
+            return ds, ds.eval_batch(512)
         data = {"mnist": mnist_like, "cifar": cifar_like}[self.dataset](
             num_samples, seed=seed
         )
@@ -156,6 +172,14 @@ class Scenario:
             cfg["profile"] = self.profile
         if self.participation is not None:
             cfg["participation"] = self.participation
+        if self.store is not None:
+            store = self.store
+            if isinstance(store, dict) and store.get("k_max") is not None:
+                # the template's buffer size is an upper bound: a shrunk
+                # override fleet (smoke runs, tests) clamps it to the actual
+                # client count instead of failing k_max > N validation
+                store = dict(store, k_max=min(int(store["k_max"]), c))
+            cfg["store"] = store
         cfg.update(overrides)
         # the fleet sampler follows the run seed whether the profile came
         # from the template or an override (unless explicitly pinned)
@@ -187,8 +211,13 @@ class ScenarioRun:
 
     def batch_source(self):
         """The batch source matching the scheduler's contract."""
-        from repro.data import ClientBatcher
+        from repro.data import ClientBatcher, ProceduralFederated
 
+        if isinstance(self.dataset, ProceduralFederated):
+            # callable (k, clients=None) with supports_clients=True: the
+            # sparse-residency path draws only the round's participants, and
+            # next_batch(client) covers the async per-client contract
+            return self.dataset
         if self.scenario.scheduler == "async":
             return ClientBatcher(self.dataset, self.batch_size, seed=self.seed)
         rng = np.random.default_rng(self.seed)
@@ -286,6 +315,20 @@ register_scenario(Scenario(
     scheduler="sync", partition="label_skew",
     partition_params={"classes_per_client": 2},
     participation={"strategy": "uniform-k", "k": 2},
+))
+
+register_scenario(Scenario(
+    name="million-client-ring",
+    description="Scale lane: 10^6 procedurally-generated clients on a ring of "
+                "8 edge servers; uniform-k sampling plus a host-offload state "
+                "store keep the device footprint at k_max=32 client models "
+                "regardless of fleet size.",
+    scheduler="round", dataset="procedural", partition="label_skew",
+    partition_params={"classes_per_client": 2},
+    num_clients=1_000_000, num_clusters=8, tau1=2, tau2=1, alpha=1,
+    participation={"strategy": "uniform-k", "k": 4},
+    store={"kind": "host-offload", "k_max": 32},
+    batch_size=4,
 ))
 
 register_scenario(Scenario(

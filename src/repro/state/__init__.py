@@ -1,0 +1,668 @@
+"""Sparse resident client state: device buffers sized by participation, not N.
+
+The runtime historically kept a dense ``(N, params)`` stack on device —
+client count bounded by accelerator memory, fatal for the ROADMAP's
+"millions of users" target even though only the sampled ``k`` clients per
+round ever touch the weight path (see ``repro.participation``).  This module
+makes residency a pluggable policy behind one protocol:
+
+``DenseResidentStore``
+    The legacy layout.  The scheduler keeps owning its stacked
+    params/opt_state exactly as before (the store *attaches* to the
+    scheduler attribute rather than copying), so dense runs stay bitwise
+    identical to the pre-store code path.
+
+``HostOffloadStore``
+    A fixed ``(k_max, params)`` device buffer.  Each superstep the round's
+    participants are *gathered* into per-cluster slots, the donated compiled
+    step runs on the buffer, and results are *scattered* back; the cold
+    majority never materializes on device.  Two residency models:
+
+    * ``mode="cluster"`` (default, protocol-faithful): SD-FEEL broadcasts
+      every aggregate back to the whole cluster, so at round boundaries each
+      client's model *is* its cluster model ``y_d``.  Only the ``(D, params)``
+      cluster stack persists on device — gather is a device-side ``take``
+      (zero host traffic), scatter reads one slot per cluster, and cold
+      clients are implicit (exactly Lemma 1's broadcast).
+    * ``mode="client"``: every participant additionally keeps a persistent
+      per-client state in a host-side :class:`HostArrayStore` (reusing the
+      checkpoint layer's leaf naming + (de)serialization, optionally spilled
+      to disk).  Cold clients re-initialize from their cluster model
+      (``cold_init="cluster"``, FedAvg-style) or from the global init
+      (``cold_init="initial"``) when first gathered.
+
+Residency is planned per round from the participation mask
+(:func:`plan_residency`): participants are packed cluster-major into
+``k_max // D`` slots per cluster, short clusters pad by repeating a
+participant at weight exactly 0.  The slot->cluster map is a *constant*, so
+changing which clients are resident changes gather values only — never the
+compiled program (the same traced-operand trick as participation weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.protocol import ClusterSpec
+
+PyTree = Any
+
+__all__ = [
+    "ClientStateStore",
+    "DenseResidentStore",
+    "HostOffloadStore",
+    "HostArrayStore",
+    "Residency",
+    "plan_residency",
+    "identity_residency",
+    "sub_weights",
+    "STORE_REGISTRY",
+    "register_store",
+    "resolve_store",
+    "live_device_bytes",
+]
+
+
+def live_device_bytes() -> int:
+    """Bytes held by every live jax array (the device-memory proxy used by
+    ``benchmarks/state_scaling.py``; on CPU jax, 'device' arrays are the
+    backend-committed buffers, which is exactly what offload must bound)."""
+    import gc
+
+    gc.collect()
+    return sum(int(x.nbytes) for x in jax.live_arrays())
+
+
+def _tree_bytes(tree: PyTree) -> int:
+    return sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Residency planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Residency:
+    """Which client occupies each of the ``k_max`` device slots this round.
+
+    ``clients[s]`` is the fleet index resident in slot ``s``; ``valid[s]`` is
+    False for padding slots (a short cluster repeats one of its participants
+    — the pad carries aggregation weight exactly 0 and is never scattered
+    back).  ``slot_cluster`` is the constant slot->cluster map.
+    """
+
+    clients: np.ndarray       # (k_max,) int64
+    valid: np.ndarray         # (k_max,) bool
+    slot_cluster: np.ndarray  # (k_max,) int64
+    identity: bool = False    # True when slots == the full fleet, in order
+
+    @property
+    def k_max(self) -> int:
+        return int(self.clients.shape[0])
+
+    def participant_mask(self, num_clients: int) -> np.ndarray:
+        """Fleet-sized boolean mask of the clients actually resident."""
+        m = np.zeros(num_clients, dtype=bool)
+        m[self.clients[self.valid]] = True
+        return m
+
+
+def identity_residency(clusters: ClusterSpec) -> Residency:
+    """Every client resident, in fleet order (the ``k_max == N`` case)."""
+    c = clusters.num_clients
+    return Residency(
+        clients=np.arange(c, dtype=np.int64),
+        valid=np.ones(c, dtype=bool),
+        slot_cluster=np.asarray(clusters.assignments, dtype=np.int64),
+        identity=True,
+    )
+
+
+def plan_residency(
+    clusters: ClusterSpec, mask: np.ndarray, slots_per_cluster: int
+) -> Residency:
+    """Pack a round's participants into fixed per-cluster device slots.
+
+    Cluster ``d`` owns slots ``[d * g, (d + 1) * g)`` for
+    ``g = slots_per_cluster``; its participants fill them in client order and
+    a short cluster pads by repeating its first participant (weight 0 — see
+    :func:`sub_weights`).  Raises when a cluster's participants exceed its
+    slots, and when a cluster has none at all: the dense path's
+    empty-cluster fallback aggregates the *full* membership, which an
+    offloaded fleet cannot materialize — use a plan that guarantees
+    per-cluster coverage (``uniform-k`` does).
+    """
+    mask = np.asarray(mask, dtype=bool)
+    if mask.shape != (clusters.num_clients,):
+        raise ValueError(
+            f"mask has shape {mask.shape}, expected ({clusters.num_clients},)"
+        )
+    g = int(slots_per_cluster)
+    d_num = clusters.num_clusters
+    assign = np.asarray(clusters.assignments, dtype=np.int64)
+    participants = np.flatnonzero(mask)
+    part_clusters = assign[participants]
+    counts = np.bincount(part_clusters, minlength=d_num)
+    if (counts == 0).any():
+        empty = int(np.flatnonzero(counts == 0)[0])
+        raise ValueError(
+            f"residency: cluster {empty} has no participants this round; an "
+            f"offloaded fleet cannot back-fill to full membership — use a "
+            f"participation plan with per-cluster coverage (e.g. uniform-k)"
+        )
+    if (counts > g).any():
+        full = int(np.flatnonzero(counts > g)[0])
+        raise ValueError(
+            f"residency: cluster {full} has {int(counts[full])} participants "
+            f"but only {g} device slots (k_max = D * {g}); raise k_max or "
+            f"sample fewer clients per cluster"
+        )
+    clients = np.empty(d_num * g, dtype=np.int64)
+    valid = np.zeros(d_num * g, dtype=bool)
+    order = np.argsort(part_clusters, kind="stable")  # cluster-major, client order
+    sorted_participants = participants[order]
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    for d in range(d_num):
+        p = sorted_participants[offsets[d]:offsets[d + 1]]
+        clients[d * g:d * g + len(p)] = p
+        clients[d * g + len(p):(d + 1) * g] = p[0]  # pad: repeat, weight 0
+        valid[d * g:d * g + len(p)] = True
+    slot_cluster = np.repeat(np.arange(d_num, dtype=np.int64), g)
+    return Residency(clients=clients, valid=valid, slot_cluster=slot_cluster)
+
+
+def sub_weights(full_weights: np.ndarray, res: Residency) -> np.ndarray:
+    """Slice a fleet-sized weight vector onto the resident slots.
+
+    Padding slots get exactly 0, so a repeated participant contributes once;
+    for per-cluster-renormalized plan weights the slot weights of each
+    cluster still sum to 1.
+    """
+    w = np.asarray(full_weights, dtype=np.float64)[res.clients]
+    return np.where(res.valid, w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Host-side array store (checkpoint-encoded leaves)
+# ---------------------------------------------------------------------------
+
+class HostArrayStore:
+    """Per-entry host storage of pytree leaves, checkpoint-encoded.
+
+    Leaf naming and on-disk encoding reuse the checkpoint layer
+    (``repro.checkpoint.flatten_with_names`` / ``save_leaves`` /
+    ``load_leaves``), so a spilled entry is a valid mini-record of the same
+    format the full-state checkpoints use.  ``spill_dir=None`` keeps entries
+    in RAM; a directory streams every entry through one ``.npz`` per entry.
+    """
+
+    def __init__(self, template: PyTree, spill_dir: Optional[str] = None):
+        from ..checkpoint import flatten_with_names
+
+        self.names = [n for n, _ in flatten_with_names(template)]
+        self.spill_dir = spill_dir
+        self._ram: dict[int, list[np.ndarray]] = {}
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+
+    def _path(self, idx: int) -> str:
+        return os.path.join(self.spill_dir, f"client_{idx:08d}.npz")
+
+    def __contains__(self, idx: int) -> bool:
+        if self.spill_dir is None:
+            return idx in self._ram
+        return idx in self._ram or os.path.exists(self._path(idx))
+
+    def __len__(self) -> int:
+        if self.spill_dir is None:
+            return len(self._ram)
+        names = {f for f in os.listdir(self.spill_dir) if f.endswith(".npz")}
+        return len(names)
+
+    def put(self, idx: int, leaves: list[np.ndarray]) -> None:
+        leaves = [np.ascontiguousarray(x) for x in leaves]
+        if self.spill_dir is None:
+            self._ram[int(idx)] = leaves
+        else:
+            from ..checkpoint import save_leaves
+
+            save_leaves(self._path(idx), list(zip(self.names, leaves)))
+
+    def get(self, idx: int) -> Optional[list[np.ndarray]]:
+        if self.spill_dir is None:
+            return self._ram.get(int(idx))
+        if not os.path.exists(self._path(idx)):
+            return None
+        from ..checkpoint import load_leaves
+
+        return load_leaves(self._path(idx))
+
+    def keys(self) -> list[int]:
+        if self.spill_dir is None:
+            return sorted(self._ram)
+        return sorted(
+            int(f[len("client_"):-len(".npz")])
+            for f in os.listdir(self.spill_dir)
+            if f.startswith("client_") and f.endswith(".npz")
+        )
+
+    def nbytes(self) -> int:
+        """Host bytes of RAM-resident entries (spilled entries cost disk)."""
+        return sum(x.nbytes for ls in self._ram.values() for x in ls)
+
+
+# ---------------------------------------------------------------------------
+# The store protocol + implementations
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ClientStateStore(Protocol):
+    """Where per-client federation state lives between supersteps.
+
+    ``resident`` stores keep the full stacked state on device and attach to
+    the scheduler's own attribute (zero-copy, legacy layout); offloaded
+    stores are bound once (``bind``) and then cycle
+    ``residency -> gather -> [compiled step] -> scatter`` per superstep.
+    """
+
+    kind: str
+    resident: bool
+    num_clients: int
+
+    def device_bytes(self) -> int: ...
+
+
+class DenseResidentStore:
+    """The legacy dense ``(N, params)`` device layout, behind the store API.
+
+    The scheduler still owns its stacked state exactly as before; ``attach``
+    points the store at the owning attribute so ``state`` reads/writes
+    through (bit-identical — no copy, no indirection in the step path).
+    Stand-alone use (tests) just assigns ``state`` directly.
+    """
+
+    kind = "dense"
+    resident = True
+
+    def __init__(self, num_clients: int):
+        self.num_clients = int(num_clients)
+        self._owner = None
+        self._attr = "params"
+        self._state: PyTree = None
+
+    def attach(self, owner, attr: str = "params") -> "DenseResidentStore":
+        self._owner, self._attr = owner, attr
+        return self
+
+    @property
+    def state(self) -> PyTree:
+        if self._owner is not None:
+            return getattr(self._owner, self._attr)
+        return self._state
+
+    @state.setter
+    def state(self, value: PyTree) -> None:
+        if self._owner is not None:
+            setattr(self._owner, self._attr, value)
+        else:
+            self._state = value
+
+    @property
+    def k_max(self) -> int:
+        return self.num_clients
+
+    def device_bytes(self) -> int:
+        return 0 if self.state is None else _tree_bytes(self.state)
+
+
+class HostOffloadStore:
+    """Fixed ``(k_max, params)`` device residency over an N-client fleet.
+
+    See the module docstring for the two residency models.  Lifecycle::
+
+        store.bind(clusters, model, seed)       # once, from Scheduler.bind
+        res = store.residency(mask)             # per round/superstep
+        buf = store.gather(res)                 # (k_max, ...) device buffer
+        ... donated compiled step on buf ...
+        store.scatter(res, buf)
+
+    ``k_max=None`` (or ``k_max == N``) means identity residency: every
+    client gets a slot and ``residency()`` ignores the mask — the
+    full-resident configuration, used by equivalence tests and as the async
+    scheduler's whole-stack roundtrip.
+    """
+
+    kind = "host-offload"
+    resident = False
+
+    def __init__(self, num_clients: int, k_max: Optional[int] = None,
+                 mode: str = "cluster", cold_init: str = "cluster",
+                 spill_dir: Optional[str] = None):
+        if mode not in ("cluster", "client"):
+            raise ValueError(f"mode must be 'cluster' or 'client', got {mode!r}")
+        if cold_init not in ("cluster", "initial"):
+            raise ValueError(
+                f"cold_init must be 'cluster' or 'initial', got {cold_init!r}"
+            )
+        self.num_clients = int(num_clients)
+        self.k_max = None if k_max is None else int(k_max)
+        if self.k_max is not None and not (1 <= self.k_max <= self.num_clients):
+            raise ValueError(
+                f"k_max must lie in [1, num_clients={num_clients}], got {k_max}"
+            )
+        self.mode = mode
+        self.cold_init = cold_init
+        self.spill_dir = spill_dir
+        self.clusters: Optional[ClusterSpec] = None
+
+    # -- binding -------------------------------------------------------------
+    def bind(self, clusters: ClusterSpec, model, seed_or_key) -> None:
+        if clusters.num_clients != self.num_clients:
+            raise ValueError(
+                f"store covers {self.num_clients} clients, fleet has "
+                f"{clusters.num_clients}"
+            )
+        self.clusters = clusters
+        d = clusters.num_clusters
+        if self.k_max is None:
+            self.k_max = self.num_clients
+        if self.k_max == self.num_clients:
+            self.slots_per_cluster = None  # identity: real membership
+            self.sub_clusters = clusters
+            self._identity = identity_residency(clusters)
+        else:
+            if self.k_max % d:
+                raise ValueError(
+                    f"k_max={self.k_max} must be a multiple of the "
+                    f"{d} clusters (fixed per-cluster slot counts)"
+                )
+            self.slots_per_cluster = self.k_max // d
+            self.sub_clusters = ClusterSpec.uniform(self.k_max, d)
+            self._identity = None
+        key = (
+            seed_or_key
+            if isinstance(seed_or_key, jax.Array)
+            else jax.random.PRNGKey(int(seed_or_key))
+        )
+        w0 = model.init(key)
+        # the persistent device state: one model per cluster (Alg. 1 line 1
+        # initializes every client — and therefore every cluster — to w0)
+        self.cluster_models = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (d,) + x.shape).copy(), w0
+        )
+        self._w0_host = (
+            [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(w0)]
+            if self.cold_init == "initial" else None
+        )
+        self._treedef = jax.tree.structure(w0)
+        self._host = HostArrayStore(w0, self.spill_dir) if self.mode == "client" else None
+        # constant index arrays: residency changes never touch these, so the
+        # jitted gather/extract programs are compiled exactly once
+        assign = np.asarray(clusters.assignments, dtype=np.int64)
+        if self._identity is not None:
+            slot_cluster = assign
+            first_slot = np.array(
+                [int(np.flatnonzero(assign == j)[0]) for j in range(d)],
+                dtype=np.int64,
+            )
+        else:
+            g = self.slots_per_cluster
+            slot_cluster = np.repeat(np.arange(d, dtype=np.int64), g)
+            first_slot = np.arange(d, dtype=np.int64) * g
+        self._slot_cluster = jnp.asarray(slot_cluster)
+        self._first_slot = jnp.asarray(first_slot)
+        self._gather_cluster = jax.jit(
+            lambda cm: jax.tree.map(
+                lambda y: jnp.take(y, self._slot_cluster, axis=0), cm
+            )
+        )
+        self._extract_clusters = jax.jit(
+            lambda buf: jax.tree.map(
+                lambda x: jnp.take(x, self._first_slot, axis=0), buf
+            )
+        )
+        m = np.asarray(clusters.m(), dtype=np.float64)
+        self._m = m
+        self._m_tilde = jnp.asarray(clusters.m_tilde(), jnp.float32)
+        self._consensus = jax.jit(
+            lambda cm: jax.tree.map(
+                lambda y: jnp.einsum("d...,d->...", y, self._m_tilde), cm
+            )
+        )
+
+    # -- per-round API -------------------------------------------------------
+    def residency(self, mask: Optional[np.ndarray] = None) -> Residency:
+        """Slot assignment for one round's participation mask.
+
+        Identity stores (``k_max == N``) always return the full-fleet
+        residency; sparse stores require a mask with per-cluster coverage.
+        """
+        if self._identity is not None:
+            return self._identity
+        if mask is None:
+            raise ValueError(
+                f"a sparse HostOffloadStore (k_max={self.k_max} < "
+                f"N={self.num_clients}) needs a participation mask; configure "
+                f"a participation plan (e.g. uniform-k)"
+            )
+        return plan_residency(self.clusters, mask, self.slots_per_cluster)
+
+    def stage(self, res: Residency, in_flight: Optional[Residency] = None):
+        """Pre-assemble next-round host rows that cannot change under the
+        in-flight step (client mode; cluster mode gathers on device).
+
+        A warm client's stored state only changes when it is scattered, so
+        any slot whose client is *not* resident in the in-flight step can be
+        read early — this is the piece of the state gather that prefetches
+        together with the participant batches.  Cold slots and conflicting
+        warm slots are left for ``gather`` to fill after the scatter.
+        """
+        if self.mode != "client":
+            return None
+        busy = (
+            set(int(c) for c in in_flight.clients[in_flight.valid])
+            if in_flight is not None else set()
+        )
+        staged: dict[int, list[np.ndarray]] = {}
+        for s, c in enumerate(res.clients):
+            c = int(c)
+            if c in busy:
+                continue
+            leaves = self._host.get(c)
+            if leaves is None and self.cold_init == "initial":
+                leaves = self._w0_host
+            if leaves is not None:
+                staged[s] = leaves
+        return staged
+
+    def gather(self, res: Residency, staged=None) -> PyTree:
+        """(k_max, ...) device buffer of the resident clients' states."""
+        if self.mode == "cluster":
+            # at round boundaries every client's state IS its cluster model
+            # (Lemma 1 broadcasts each aggregate to the whole cluster) —
+            # gather is a device-side take on the constant slot->cluster map
+            return self._gather_cluster(self.cluster_models)
+        cm_host = None
+        rows: list[list[np.ndarray]] = []
+        for s, c in enumerate(res.clients):
+            if staged is not None and s in staged:
+                rows.append(staged[s])
+                continue
+            leaves = self._host.get(int(c))
+            if leaves is None:  # cold client: re-init FedAvg-style
+                if self.cold_init == "initial":
+                    leaves = self._w0_host
+                else:
+                    if cm_host is None:
+                        cm_host = [
+                            np.asarray(jax.device_get(x))
+                            for x in jax.tree.leaves(self.cluster_models)
+                        ]
+                    d = int(res.slot_cluster[s])
+                    leaves = [x[d] for x in cm_host]
+            rows.append(leaves)
+        stacked = [
+            np.stack([r[i] for r in rows]) for i in range(len(self._host.names))
+        ]
+        return jax.tree.unflatten(
+            self._treedef, [jnp.asarray(x) for x in stacked]
+        )
+
+    def scatter(self, res: Residency, buffer: PyTree) -> None:
+        """Write the superstep's outputs back; pads are never written.
+
+        The cluster stack always updates (after the inter-cluster gossip all
+        of a cluster's slots hold the identical post-mixing cluster model, so
+        one slot per cluster is the whole truth); client mode additionally
+        persists each valid participant's row to the host store.
+        """
+        self.cluster_models = self._extract_clusters(buffer)
+        if self.mode == "client":
+            host = [np.asarray(x) for x in jax.device_get(jax.tree.leaves(buffer))]
+            for s in np.flatnonzero(res.valid):
+                self._host.put(
+                    int(res.clients[s]), [x[int(s)] for x in host]
+                )
+
+    # -- consensus + introspection -------------------------------------------
+    def state_of(self, client: int) -> list[np.ndarray]:
+        """Host leaves of one client's current conceptual state."""
+        if self.mode == "client":
+            leaves = self._host.get(int(client))
+            if leaves is not None:
+                return leaves
+            if self.cold_init == "initial":
+                return self._w0_host
+        d = int(self.clusters.assignments[int(client)])
+        return [
+            np.asarray(jax.device_get(x))[d]
+            for x in jax.tree.leaves(self.cluster_models)
+        ]
+
+    def _host_consensus(self, include: np.ndarray) -> list[np.ndarray]:
+        """``sum_i m_i w_i`` over the included clients, host-side (client
+        mode): warm clients contribute their stored state, cold clients
+        their ``cold_init`` source."""
+        assign = np.asarray(self.clusters.assignments, dtype=np.int64)
+        warm = [c for c in self._host.keys() if include[c]]
+        cold_mass = np.zeros(self.clusters.num_clusters, dtype=np.float64)
+        np.add.at(cold_mass, assign[include], self._m[include])
+        for c in warm:
+            cold_mass[assign[c]] -= self._m[c]
+        if self.cold_init == "initial":
+            cold_total = float(cold_mass.sum())
+            acc = [cold_total * np.asarray(x, dtype=np.float64)
+                   for x in self._w0_host]
+        else:
+            cm_host = [
+                np.asarray(jax.device_get(x), dtype=np.float64)
+                for x in jax.tree.leaves(self.cluster_models)
+            ]
+            acc = [np.einsum("d...,d->...", x, cold_mass) for x in cm_host]
+        for c in warm:
+            for i, leaf in enumerate(self._host.get(c)):
+                acc[i] = acc[i] + self._m[c] * np.asarray(leaf, dtype=np.float64)
+        return acc
+
+    def global_params(self, resident: Optional[Residency] = None,
+                      buffer: Optional[PyTree] = None) -> PyTree:
+        """Consensus model ``sum_i m_i w_i`` over the *conceptual* fleet.
+
+        Cluster mode: every client holds its cluster model, so this is
+        exactly ``sum_d m~_d y_d`` (one device einsum).  Client mode: the
+        warm/cold host accumulation of :meth:`_host_consensus`.
+
+        Mid-round (``resident``/``buffer`` given, i.e. a superstep is in
+        flight and has not scattered yet), the residents' conceptual state is
+        the in-flight buffer row, everyone else keeps their stored state —
+        used by eval boundaries that land between gather and scatter.
+        """
+        if buffer is None:
+            if self.mode == "cluster":
+                return self._consensus(self.cluster_models)
+            acc = self._host_consensus(np.ones(self.num_clients, dtype=bool))
+        else:
+            include = ~resident.participant_mask(self.num_clients)
+            if self.mode == "cluster":
+                assign = np.asarray(self.clusters.assignments, dtype=np.int64)
+                mass = np.zeros(self.clusters.num_clusters, dtype=np.float64)
+                np.add.at(mass, assign[include], self._m[include])
+                cm_host = [
+                    np.asarray(jax.device_get(x), dtype=np.float64)
+                    for x in jax.tree.leaves(self.cluster_models)
+                ]
+                acc = [np.einsum("d...,d->...", x, mass) for x in cm_host]
+            else:
+                acc = self._host_consensus(include)
+            buf_host = [
+                np.asarray(x, dtype=np.float64)
+                for x in jax.device_get(jax.tree.leaves(buffer))
+            ]
+            for s in np.flatnonzero(resident.valid):
+                c = int(resident.clients[s])
+                for i, x in enumerate(buf_host):
+                    acc[i] = acc[i] + self._m[c] * x[int(s)]
+        return jax.tree.unflatten(
+            self._treedef, [jnp.asarray(x, jnp.float32) for x in acc]
+        )
+
+    def device_bytes(self) -> int:
+        """Persistent device footprint between supersteps (cluster stack)."""
+        return _tree_bytes(self.cluster_models)
+
+    def host_bytes(self) -> int:
+        return 0 if self._host is None else self._host.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+STORE_REGISTRY: dict[str, Callable[..., ClientStateStore]] = {}
+
+
+def register_store(name: str):
+    """Register a store factory ``(num_clients, **params) -> ClientStateStore``."""
+
+    def deco(factory):
+        STORE_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+register_store("dense")(DenseResidentStore)
+register_store("host-offload")(HostOffloadStore)
+
+
+def resolve_store(spec, num_clients: int) -> ClientStateStore:
+    """Resolve a ``FleetSpec.store`` spec into a store instance.
+
+    Accepts ``None`` (dense), a registered kind name, a ``{"kind": name,
+    **params}`` dict, or a ready store (validated for fleet size).
+    """
+    if spec is None:
+        return DenseResidentStore(num_clients)
+    if isinstance(spec, (DenseResidentStore, HostOffloadStore)) or (
+        not isinstance(spec, (str, dict)) and hasattr(spec, "resident")
+    ):
+        if getattr(spec, "num_clients", num_clients) != num_clients:
+            raise ValueError(
+                f"store covers {spec.num_clients} clients, fleet has {num_clients}"
+            )
+        return spec
+    if isinstance(spec, str):
+        kind, params = spec, {}
+    else:
+        params = dict(spec)
+        kind = params.pop("kind")
+    if kind not in STORE_REGISTRY:
+        raise KeyError(
+            f"unknown state store {kind!r}; registered: {sorted(STORE_REGISTRY)}"
+        )
+    return STORE_REGISTRY[kind](num_clients, **params)

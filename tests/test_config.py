@@ -1,0 +1,196 @@
+"""Typed run-config API: RunConfig round-trips + pinned deprecation surface.
+
+The flat-dict era is a compatibility shim now: every entry point funnels
+through :class:`repro.core.config.RunConfig`, and the legacy spellings are
+pinned here to keep warning *exactly once per call* until removal:
+
+* ``make_run(<flat dict>)``            -> DeprecationWarning
+* ``Scheduler(profile=/participation=)`` -> DeprecationWarning
+* ``make_run(RunConfig)`` / named scenarios -> silent
+
+plus the schema mechanics: lossless ``from_dict``/``to_dict`` round-trips,
+``scheduler_config`` stripping the data-environment keys, ``validate``'s
+error surface, and JSON-safe ``describe()`` for checkpoint manifests.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, SDFEELConfig, make_run, ring
+from repro.core.config import (
+    DataSpec, ExecSpec, FleetSpec, ModelSpec, RunConfig,
+)
+from repro.core.runtime import RoundScheduler, SyncScheduler
+from repro.core.sdfeel import FLSpec
+from repro.models import MnistCNN
+
+
+def _flat(**extra):
+    return {
+        "scheduler": "round", "model": MnistCNN(), "num_clients": 8,
+        "num_clusters": 4, "tau1": 2, "tau2": 1, "alpha": 1,
+        "learning_rate": 0.05, "seed": 3,
+        "participation": {"strategy": "uniform-k", "k": 1},
+        "store": {"kind": "host-offload", "k_max": 4},
+        **extra,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Round-trips
+# ---------------------------------------------------------------------------
+
+def test_from_dict_buckets_every_key_and_to_dict_is_lossless():
+    d = _flat(profile={"kind": "bimodal-straggler"}, psi="constant",
+              dataset="mnist", num_samples=1234)
+    rc = RunConfig.from_dict(dict(d))
+    assert rc.exec.scheduler == "round" and rc.exec.tau1 == 2
+    assert rc.fleet.store == {"kind": "host-offload", "k_max": 4}
+    assert rc.fleet.profile == {"kind": "bimodal-straggler"}
+    assert rc.fleet.participation == {"strategy": "uniform-k", "k": 1}
+    assert rc.num_clients == 8 and rc.seed == 3
+    assert rc.data.dataset == "mnist" and rc.data.num_samples == 1234
+    assert rc.exec.extras == {"psi": "constant"}  # unknown key rides along
+
+    out = rc.to_dict()
+    # lossless: every input key comes back unchanged; touching any data key
+    # materializes the remaining DataSpec defaults alongside
+    assert all(out[k] == v for k, v in d.items())
+    assert set(out) - set(d) <= {"partition", "partition_params", "batch_size"}
+
+    # the factory-facing view drops the data-environment keys only
+    sched_cfg = rc.scheduler_config()
+    assert "dataset" not in sched_cfg and "num_samples" not in sched_cfg
+    assert sched_cfg["store"] == {"kind": "host-offload", "k_max": 4}
+
+
+def test_model_spec_variants():
+    m = MnistCNN()
+    assert RunConfig.from_dict({"model": m}).model.instance is m
+    rc = RunConfig.from_dict({"model": "mnist-cnn"})
+    assert rc.model.kind == "mnist-cnn" and rc.model.instance is None
+    assert type(rc.model.build()).__name__ == "MnistCNN"
+    with pytest.raises(KeyError, match="unknown model kind"):
+        ModelSpec(kind="resnet-nope").build()
+    with pytest.raises(ValueError, match="kind"):
+        ModelSpec().build()
+
+
+def test_describe_is_json_safe():
+    rc = RunConfig.from_dict(_flat(latency=object()))
+    d = rc.describe()
+    json.dumps(d)  # must not raise
+    assert d["exec"]["scheduler"] == "round"
+    assert d["fleet"]["store"] == {"kind": "host-offload", "k_max": 4}
+
+
+# ---------------------------------------------------------------------------
+# validate()
+# ---------------------------------------------------------------------------
+
+def test_validate_error_surface():
+    with pytest.raises(ValueError, match="kind or an instance"):
+        RunConfig(model=ModelSpec()).validate()
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                  exec=ExecSpec(scheduler="semi-async")).validate()
+    with pytest.raises(ValueError, match="tau1"):
+        RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                  exec=ExecSpec(tau1=0)).validate()
+    with pytest.raises(TypeError, match="participation"):
+        RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                  fleet=FleetSpec(participation=3.5)).validate()
+    with pytest.raises(KeyError, match="unknown state store"):
+        RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                  fleet=FleetSpec(store="tape")).validate()
+    with pytest.raises(ValueError, match="not both"):
+        RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                  clusters=ClusterSpec.uniform(8, 4),
+                  num_clients=8).validate()
+
+
+def test_make_run_still_fails_fast_on_typos():
+    with pytest.raises(TypeError, match="unused scenario keys"):
+        make_run(RunConfig(
+            model=ModelSpec(instance=MnistCNN()),
+            exec=ExecSpec(scheduler="round", extras={"turbo": True}),
+            num_clients=8, num_clusters=4,
+        ))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation pins
+# ---------------------------------------------------------------------------
+
+def test_make_run_flat_dict_warns_and_matches_typed_path():
+    with pytest.warns(DeprecationWarning, match="make_run.*deprecated"):
+        rt_flat = make_run(_flat())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rt_typed = make_run(RunConfig.from_dict(_flat()))  # silent
+    a = rt_flat.scheduler.store.state_of(0)
+    b = rt_typed.scheduler.store.state_of(0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_named_scenario_paths_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        make_run("mnist-noniid-ring")
+        make_run({"scenario": "mnist-noniid-ring", "tau1": 3})
+
+
+def test_sync_scheduler_legacy_keywords_warn():
+    cfg = SDFEELConfig(clusters=ClusterSpec.uniform(8, 4), topology=ring(4),
+                       tau1=2, tau2=1, alpha=1, learning_rate=0.05)
+    with pytest.warns(DeprecationWarning,
+                      match=r"SyncScheduler\(participation=.*fleet=FleetSpec"):
+        s = SyncScheduler(cfg, participation={"strategy": "uniform-k", "k": 1})
+    assert s.fleet.participation == {"strategy": "uniform-k", "k": 1}
+    with pytest.warns(DeprecationWarning, match="profile"):
+        SyncScheduler(cfg, profile={"kind": "uniform"})
+    # the replacement spelling is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SyncScheduler(cfg, fleet=FleetSpec(
+            participation={"strategy": "uniform-k", "k": 1}))
+
+
+def test_round_scheduler_legacy_keywords_warn():
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=2, tau2=1, alpha=1,
+                learning_rate=0.05)
+    with pytest.warns(DeprecationWarning,
+                      match=r"RoundScheduler\(.*fleet=FleetSpec"):
+        r = RoundScheduler(fl, profile={"kind": "uniform"},
+                           participation="full")
+    assert r.fleet.profile == {"kind": "uniform"}
+    assert r.fleet.participation == "full"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        RoundScheduler(fl, fleet=FleetSpec(participation="full"))
+
+
+def test_fleet_spec_resolves_profile_and_store():
+    fs = FleetSpec(profile={"kind": "bimodal-straggler",
+                            "straggler_frac": 0.25},
+                   store={"kind": "host-offload", "k_max": 4})
+    prof = fs.resolve_profile(8)
+    assert prof.speeds.shape == (8,)
+    store = fs.resolve_store(8)
+    assert store.kind == "host-offload" and store.k_max == 4
+    assert FleetSpec().is_default() and not fs.is_default()
+    assert FleetSpec().resolve_store(8).kind == "dense"
+    assert FleetSpec().resolve_profile(8) is None
+
+
+def test_data_spec_defaults_round_trip():
+    rc = RunConfig(model=ModelSpec(kind="mnist-cnn"),
+                   data=DataSpec(dataset="procedural", batch_size=4))
+    out = rc.to_dict()
+    assert out["dataset"] == "procedural" and out["batch_size"] == 4
+    rc2 = RunConfig.from_dict(out)
+    assert rc2.data.dataset == "procedural"
+    assert rc2.data.num_samples == rc.data.num_samples

@@ -1,0 +1,385 @@
+"""Client-state stores: residency planning + offload/dense equivalence.
+
+Four layers, matching the ISSUE-6 acceptance criteria:
+
+* planning — cluster-major slot packing, zero-weight pads, and the error
+  surface (empty cluster, overfull cluster, non-divisible ``k_max``);
+* host store — checkpoint-encoded round-trips, RAM and spilled;
+* equivalence — a full-resident (``k_max == N``) HostOffloadStore is
+  *bitwise* the dense path at round boundaries for all three schedulers
+  (and every aggregation backend on the round engine), and a sparse store
+  under ``uniform-k`` matches the dense participation path client by
+  client (Lemma 1 broadcasts each aggregate to the whole cluster, so at
+  boundaries every client's state IS its cluster model);
+* compilation — changing which clients are resident never recompiles: the
+  slot->cluster map is constant, so the jit caches stay at size 1.
+
+The consensus model is compared with ``allclose`` rather than bitwise: the
+dense path reduces ``sum_i m_i w_i`` over N clients while the store reduces
+``sum_d m~_d y_d`` over D clusters — identical values, different float
+summation order.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, MNIST_LATENCY, make_run
+from repro.core.config import ExecSpec, FleetSpec, ModelSpec, RunConfig
+from repro.data import ClientBatcher, FederatedDataset, iid_partition, mnist_like
+from repro.models import MnistCNN
+from repro.state import (
+    DenseResidentStore, HostArrayStore, HostOffloadStore, Residency,
+    identity_residency, plan_residency, resolve_store, sub_weights,
+)
+
+C, D = 8, 4
+UNIFORM_K = {"strategy": "uniform-k", "k": 1}
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    data = mnist_like(600, seed=0)
+    train, test = data.split(0.8)
+    parts = iid_partition(train.y, C)
+    return FederatedDataset(train, parts)
+
+
+def _spec(ds):
+    return ClusterSpec(C, tuple(i // (C // D) for i in range(C)), ds.data_sizes())
+
+
+def _run_config(ds, scheduler, store=None, participation=None, **exec_kw):
+    # the round factory builds a uniform FLSpec from counts; sync/async take
+    # an explicit ClusterSpec carrying the partition's data sizes
+    shape = ({"num_clients": C, "num_clusters": D} if scheduler == "round"
+             else {"clusters": _spec(ds)})
+    return RunConfig(
+        model=ModelSpec(instance=MnistCNN()),
+        fleet=FleetSpec(store=store, participation=participation),
+        exec=ExecSpec(scheduler=scheduler, **exec_kw),
+        seed=0,
+        **shape,
+    )
+
+
+def _client_leaves(stacked, c):
+    return [np.asarray(x)[c] for x in jax.tree.leaves(stacked)]
+
+
+def _assert_clients_bitwise(dense_sched, offload_sched, atol=0.0):
+    params = dense_sched.params
+    for c in range(C):
+        for a, b in zip(_client_leaves(params, c),
+                        offload_sched.store.state_of(c)):
+            if atol:
+                np.testing.assert_allclose(a, b, atol=atol, rtol=0)
+            else:
+                np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(
+        np.concatenate([np.ravel(x) for x in
+                        jax.tree.leaves(dense_sched.global_params())]),
+        np.concatenate([np.ravel(x) for x in
+                        jax.tree.leaves(offload_sched.global_params())]),
+        atol=1e-6, rtol=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Residency planning
+# ---------------------------------------------------------------------------
+
+def test_plan_residency_packs_cluster_major_with_zero_weight_pads():
+    spec = ClusterSpec.uniform(8, 2)  # clusters {0..3}, {4..7}
+    mask = np.zeros(8, dtype=bool)
+    mask[[1, 3, 4]] = True  # cluster 0: two participants, cluster 1: one
+    res = plan_residency(spec, mask, slots_per_cluster=2)
+    np.testing.assert_array_equal(res.clients, [1, 3, 4, 4])
+    np.testing.assert_array_equal(res.valid, [True, True, True, False])
+    np.testing.assert_array_equal(res.slot_cluster, [0, 0, 1, 1])
+    np.testing.assert_array_equal(res.participant_mask(8), mask)
+
+    w = sub_weights(np.full(8, 0.25), res)
+    assert w[3] == 0.0  # the pad repeats client 4 at weight exactly 0
+    np.testing.assert_array_equal(w[:3], [0.25, 0.25, 0.25])
+
+
+def test_plan_residency_error_surface():
+    spec = ClusterSpec.uniform(8, 2)
+    none_in_1 = np.array([True] * 4 + [False] * 4)
+    with pytest.raises(ValueError, match="no participants"):
+        plan_residency(spec, none_in_1, slots_per_cluster=2)
+    overfull = np.array([True, True, True, False, True, False, False, False])
+    with pytest.raises(ValueError, match="slots"):
+        plan_residency(spec, overfull, slots_per_cluster=2)
+    with pytest.raises(ValueError, match="shape"):
+        plan_residency(spec, np.ones(5, dtype=bool), slots_per_cluster=2)
+
+
+def test_store_construction_errors():
+    with pytest.raises(ValueError, match="k_max"):
+        HostOffloadStore(8, k_max=9)
+    with pytest.raises(ValueError, match="mode"):
+        HostOffloadStore(8, mode="gpu")
+    st = HostOffloadStore(8, k_max=6)  # 6 % 4 clusters != 0
+    with pytest.raises(ValueError, match="multiple"):
+        st.bind(ClusterSpec.uniform(8, 4), MnistCNN(), 0)
+    st2 = HostOffloadStore(8, k_max=4)
+    st2.bind(ClusterSpec.uniform(8, 4), MnistCNN(), 0)
+    with pytest.raises(ValueError, match="participation"):
+        st2.residency()  # sparse residency needs a mask
+    with pytest.raises(KeyError, match="unknown state store"):
+        resolve_store({"kind": "quantum"}, 8)
+    with pytest.raises(ValueError, match="covers"):
+        resolve_store(HostOffloadStore(4), 8)
+
+
+def test_identity_residency_is_the_full_fleet():
+    spec = ClusterSpec(6, (0, 0, 1, 1, 2, 2), tuple([1.0] * 6))
+    res = identity_residency(spec)
+    assert res.identity and res.k_max == 6
+    np.testing.assert_array_equal(res.clients, np.arange(6))
+    assert res.valid.all()
+    np.testing.assert_array_equal(res.slot_cluster, spec.assignments)
+
+
+# ---------------------------------------------------------------------------
+# Host-side array store
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spill", [False, True])
+def test_host_array_store_roundtrip(tmp_path, spill):
+    template = {"w": np.zeros((3, 2), np.float32), "b": np.zeros(5, np.float32)}
+    store = HostArrayStore(
+        template, spill_dir=str(tmp_path / "spill") if spill else None
+    )
+    rng = np.random.default_rng(0)
+    rows = {
+        i: [rng.normal(size=(3, 2)).astype(np.float32),
+            rng.normal(size=5).astype(np.float32)]
+        for i in (3, 11)
+    }
+    for i, leaves in rows.items():
+        store.put(i, leaves)
+    assert store.keys() == [3, 11] and len(store) == 2
+    assert 3 in store and 7 not in store
+    for i, leaves in rows.items():
+        for a, b in zip(store.get(i), leaves):
+            np.testing.assert_array_equal(a, b)
+    assert store.get(7) is None
+    if spill:
+        # spilled entries are valid checkpoint-layer records
+        from repro.checkpoint import load_leaves
+
+        path = os.path.join(str(tmp_path / "spill"), "client_00000003.npz")
+        for a, b in zip(load_leaves(path), rows[3]):
+            np.testing.assert_array_equal(a, b)
+    else:
+        assert store.nbytes() == sum(x.nbytes for ls in rows.values() for x in ls)
+
+
+# ---------------------------------------------------------------------------
+# Full-resident equivalence: offload(k_max=N) is bitwise the dense path
+# ---------------------------------------------------------------------------
+
+def _batches(ds, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ds.stacked_batch(4, rng) for _ in range(n)]
+
+
+def test_sync_offload_identity_bitwise(fed_data):
+    ds = fed_data
+    batches = _batches(ds, 4)
+    scheds = []
+    for store in (None, {"kind": "host-offload"}):
+        rt = make_run(_run_config(ds, "sync", store=store, tau1=2, tau2=1,
+                                  alpha=1, learning_rate=0.05,
+                                  latency=MNIST_LATENCY))
+        for k in range(1, 5):
+            rt.step(lambda k, b=batches[k - 1]: b)
+        scheds.append(rt.scheduler)
+    dense, off = scheds
+    assert isinstance(dense.store, DenseResidentStore)
+    assert off.store.kind == "host-offload" and off.store.k_max == C
+    _assert_clients_bitwise(dense, off)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas", "collective"])
+def test_round_offload_identity_bitwise(fed_data, backend):
+    ds = fed_data
+    batches = _batches(ds, 24)
+    scheds = []
+    for store in (None, {"kind": "host-offload"}):
+        rt = make_run(_run_config(ds, "round", store=store, tau1=2, tau2=1,
+                                  alpha=1, learning_rate=0.05, backend=backend,
+                                  rounds_per_step=2))
+        # pure in k: the prefetch pipeline stages ahead, and both runs must
+        # see identical per-client batches regardless of staging order
+        for _ in range(2):  # 2 supersteps x 2 rounds x tau1*tau2=2 iters
+            rt.step(lambda k: batches[(k - 1) % len(batches)])
+        scheds.append(rt.scheduler)
+    dense, off = scheds
+    # the offload engine always runs the weighted-participation factorization;
+    # on the collective backend its reduction order differs from the static
+    # path by float rounding (~1e-9), dense/pallas are exactly bitwise
+    _assert_clients_bitwise(dense, off,
+                            atol=1e-7 if backend == "collective" else 0.0)
+
+
+def test_async_offload_identity_bitwise(fed_data):
+    ds = fed_data
+    ys = []
+    for store in (None, {"kind": "host-offload"}):
+        rt = make_run(_run_config(ds, "async", store=store,
+                                  learning_rate=0.05))
+        batcher = ClientBatcher(ds, 4, seed=0)
+        for _ in range(4):
+            rt.step(batcher)
+        ys.append(rt.scheduler)
+    for a, b in zip(jax.tree.leaves(ys[0].y), jax.tree.leaves(ys[1].y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Sparse residency under uniform-k matches the dense participation path
+# ---------------------------------------------------------------------------
+
+def test_sync_sparse_offload_matches_dense_participation(fed_data):
+    ds = fed_data
+    batches = _batches(ds, 4)
+    scheds = []
+    for store in (None, {"kind": "host-offload", "k_max": 4}):
+        rt = make_run(_run_config(ds, "sync", store=store,
+                                  participation=UNIFORM_K, tau1=2, tau2=1,
+                                  alpha=1, learning_rate=0.05,
+                                  latency=MNIST_LATENCY))
+        for k in range(1, 5):
+            rt.step(lambda k, b=batches[k - 1]: b)
+        scheds.append(rt.scheduler)
+    dense, off = scheds
+    assert off.store.device_bytes() < dense.store.device_bytes()
+    _assert_clients_bitwise(dense, off)
+
+
+def test_round_sparse_offload_matches_dense_participation(fed_data):
+    ds = fed_data
+    batches = _batches(ds, 24)
+    scheds = []
+    for store in (None, {"kind": "host-offload", "k_max": 4}):
+        rt = make_run(_run_config(ds, "round", store=store,
+                                  participation=UNIFORM_K, tau1=2, tau2=1,
+                                  alpha=1, learning_rate=0.05))
+        for _ in range(3):
+            rt.step(lambda k: batches[(k - 1) % len(batches)])
+        scheds.append(rt.scheduler)
+    dense, off = scheds
+    _assert_clients_bitwise(dense, off)
+
+
+def test_offload_subsets_never_recompile(fed_data):
+    """Residency changes are data, not program: jit caches stay at size 1."""
+    ds = fed_data
+    rt = make_run(_run_config(ds, "round", store={"kind": "host-offload",
+                                                  "k_max": 4},
+                              participation={"strategy": "uniform-k", "k": 1},
+                              tau1=2, tau2=1, learning_rate=0.05))
+    sched = rt.scheduler
+    rng = np.random.default_rng(1)
+    masks = []
+    for _ in range(3):  # three supersteps -> three distinct drawn subsets
+        ev = rt.step(lambda k: ds.stacked_batch(4, rng))
+        masks.append(sched._res_cache[1].clients.copy())
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:]), \
+        "draws never changed; the no-recompile claim was not exercised"
+    assert sched._round_step._cache_size() == 1
+    assert sched.store._gather_cluster._cache_size() == 1
+    assert sched.store._extract_clusters._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# Client-mode persistence
+# ---------------------------------------------------------------------------
+
+def test_client_mode_persists_participants_and_spills(fed_data, tmp_path):
+    ds = fed_data
+    rt = make_run(_run_config(
+        ds, "round",
+        store={"kind": "host-offload", "k_max": 4, "mode": "client",
+               "spill_dir": str(tmp_path / "state")},
+        participation=UNIFORM_K, tau1=2, tau2=1, learning_rate=0.05))
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        rt.step(lambda k: ds.stacked_batch(4, rng))
+    store = rt.scheduler.store
+    warm = store._host.keys()
+    assert warm, "no participant state was persisted"
+    assert len(warm) <= 2 * 4  # at most k*D per superstep
+    # each warm entry is that client's conceptual state
+    for c in warm:
+        for a, b in zip(store.state_of(c), store._host.get(c)):
+            np.testing.assert_array_equal(a, b)
+    assert np.isfinite(np.concatenate([
+        np.ravel(x) for x in jax.tree.leaves(store.global_params())
+    ])).all()
+
+
+# ---------------------------------------------------------------------------
+# Property: scatter never touches non-participant state
+# ---------------------------------------------------------------------------
+
+class _TinyModel:
+    def init(self, key):
+        return {"w": jnp.zeros((3,), jnp.float32)}
+
+
+def test_scatter_preserves_non_participants():
+    """Property (hypothesis): for any valid mask, scatter writes exactly the
+    participants' host rows and nothing else.  Function-level importorskip so
+    the rest of this module still runs without the [test] extra; the CI
+    property lane sets REPRO_REQUIRE_PROPERTY=1 to make the skip a failure.
+    """
+    if os.environ.get("REPRO_REQUIRE_PROPERTY"):
+        import hypothesis  # noqa: F401  -- fail loudly when lane is required
+    else:
+        pytest.importorskip(
+            "hypothesis", reason="install the [test] extra for property tests"
+        )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data())
+    def check(data):
+        n, d, g = 8, 2, 2
+        spec = ClusterSpec.uniform(n, d)
+        store = HostOffloadStore(n, k_max=d * g, mode="client")
+        store.bind(spec, _TinyModel(), 0)
+        rng = np.random.default_rng(0)
+        # seed every client with a distinct persisted state
+        for c in range(n):
+            store._host.put(c, [rng.normal(size=3).astype(np.float32)])
+        before = {c: [x.copy() for x in store._host.get(c)] for c in range(n)}
+
+        # a random mask with 1..g participants per cluster
+        mask = np.zeros(n, dtype=bool)
+        for j in range(d):
+            members = list(range(j * (n // d), (j + 1) * (n // d)))
+            take = data.draw(st.integers(1, g), label=f"k_cluster_{j}")
+            chosen = data.draw(st.permutations(members),
+                               label=f"members_{j}")[:take]
+            mask[chosen] = True
+
+        res = store.residency(mask)
+        buf = store.gather(res)
+        buf = jax.tree.map(lambda x: x + 1.0, buf)  # "train"
+        store.scatter(res, buf)
+
+        for c in range(n):
+            after = store._host.get(c)
+            if mask[c]:
+                np.testing.assert_array_equal(after[0], before[c][0] + 1.0)
+            else:
+                np.testing.assert_array_equal(after[0], before[c][0])
+
+    check()
