@@ -20,8 +20,8 @@ def main() -> None:
 
     from . import (
         agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
-        moe_ablation, participation, roofline_report, straggler_wallclock,
-        throughput,
+        lm_throughput, moe_ablation, participation, roofline_report,
+        straggler_wallclock, throughput,
     )
 
     registry = {
@@ -38,6 +38,7 @@ def main() -> None:
         "straggler_wallclock": straggler_wallclock.main,
         "participation": participation.main,
         "throughput": throughput.main,
+        "lm_throughput": lm_throughput.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,
         "cifar": cifar_task.main,

@@ -5,68 +5,72 @@
 Builds a 12-layer / d_model=768 llama-style decoder (~110M params with the
 granite-8b family config scaled down), 8 clients in 4 ring clusters, and runs
 a few hundred SD-FEEL iterations of real next-token training on synthetic
-Markov corpora (one distinct corpus per client = non-IID).  The run goes
-through ``FederationRuntime`` with the whole-round scheduler: one jit per
-tau1*tau2 Algorithm-1 round.
+Markov corpora (one distinct corpus per client = non-IID).
+
+The run routes through the named ``federated-lm-ring`` scenario
+(``launch/train.py --scenario federated-lm-ring`` is the CLI equivalent):
+the per-client batch draw is one bulk ``FederatedLM.stacked_batch`` gather —
+no per-client Python loop — and the ``RoundScheduler`` stages each
+superstep's window through its ``BatchPipeline`` while the previous
+superstep runs on device.
 """
 import argparse
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_config
-from repro.core.runtime import make_run
-from repro.data.synthetic import SyntheticLM
 from repro.models import CausalLM
+from repro.scenarios import build_scenario
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200,
-                help="protocol iterations (rounded up to whole rounds)")
+                help="protocol iterations (rounded up to whole supersteps)")
 ap.add_argument("--clients", type=int, default=8)
 ap.add_argument("--d-model", type=int, default=768)
 ap.add_argument("--layers", type=int, default=12)
 ap.add_argument("--seq", type=int, default=256)
 ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--precision", choices=["float32", "bfloat16"],
+                default="float32")
+ap.add_argument("--mesh", choices=["none", "auto"], default="none",
+                help="'auto' runs the collective transition under shard_map "
+                     "when the host has one device per client")
 args = ap.parse_args()
 
 cfg = dataclasses.replace(
     get_config("granite-8b"),
     num_layers=args.layers, d_model=args.d_model, d_ff=4 * args.d_model,
     num_heads=12, num_kv_heads=4, head_dim=64, vocab_size=8192,
-    dtype="float32", remat=False, attn_chunk=128,
+    dtype=args.precision, remat=args.precision == "bfloat16", attn_chunk=128,
 )
 model = CausalLM(cfg)
 print(f"LM config: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
       f"-> {cfg.param_count() / 1e6:.1f}M params")
 
-runtime = make_run({
-    "scheduler": "round",
-    "model": model,
-    "num_clients": args.clients,
-    "num_clusters": 4,
-    "tau1": 2, "tau2": 2, "alpha": 2,
-    "learning_rate": 0.3,
-    "seed": 0,
-})
+run = build_scenario(
+    "federated-lm-ring",
+    model=model,
+    num_clients=args.clients,
+    seq_len=args.seq,
+    vocab_size=cfg.vocab_size,
+    batch_size=args.batch,
+    num_samples=512,
+    learning_rate=0.3,
+    mesh=None if args.mesh == "none" else "auto",
+)
+runtime = run.runtime
+batch_fn = run.batch_source()
 rounds = runtime.scheduler.rounds_for(args.steps)
-
-streams = [SyntheticLM.generate(512, args.seq, cfg.vocab_size, seed=11 * i)
-           for i in range(args.clients)]
-iters = [s.batches(args.batch, seed=i) for i, s in enumerate(streams)]
-
-
-def batch_fn(k):
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *[next(it) for it in iters])
-
+steps = runtime.scheduler.steps_for(args.steps)
 
 t0 = time.time()
-for r in range(1, rounds + 1):
+for s in range(1, steps + 1):
     ev = runtime.step(batch_fn)
-    if r % 5 == 0 or r == 1:
-        print(f"round {r:4d} (iter {ev.iteration:4d}) loss={float(ev.losses[-1]):.4f}  "
-              f"({(time.time() - t0):.0f}s)")
+    if s % 5 == 0 or s == 1:
+        print(f"superstep {s:4d} (iter {ev.iteration:4d}) "
+              f"loss={float(ev.losses[-1]):.4f}  ({(time.time() - t0):.0f}s)")
 
 global_params = runtime.global_params()
-print("consensus model extracted; done.")
+eval_loss, _ = runtime.evaluate(run.eval_batch)
+print(f"consensus model extracted; eval loss {eval_loss:.4f}; "
+      f"{rounds} rounds in {time.time() - t0:.0f}s.")

@@ -8,6 +8,9 @@ from .backends import (
     BACKEND_REGISTRY, register_backend, resolve_backend, select_auto_backend,
 )
 from .latency import LatencyModel, MNIST_LATENCY, CIFAR_LATENCY
+from .local_update import (
+    build_local_update, build_sequential_local_update, fused_sgd_applicable,
+)
 from .pipeline import BatchPipeline, gather_client_batches, stack_window
 from .runtime import (
     FederationRuntime, Scheduler, StepEvent, SyncScheduler, RoundScheduler,
@@ -28,6 +31,8 @@ __all__ = [
     "BACKEND_REGISTRY", "register_backend", "resolve_backend",
     "select_auto_backend",
     "LatencyModel", "MNIST_LATENCY", "CIFAR_LATENCY",
+    "build_local_update", "build_sequential_local_update",
+    "fused_sgd_applicable",
     "BatchPipeline", "gather_client_batches", "stack_window",
     "FederationRuntime", "Scheduler", "StepEvent", "SyncScheduler",
     "RoundScheduler", "AsyncScheduler", "make_run", "register_scheduler",

@@ -362,8 +362,14 @@ class CollectiveBackend:
                               m_hat: jax.Array) -> PyTree:
         from repro.sharding.compat import shard_map_compat
 
-        if self.param_specs is None:
-            raise ValueError("collective backend on a mesh needs param_specs")
+        specs = self.param_specs
+        if specs is None:
+            # default layout: every stacked leaf is sharded on its leading
+            # clients axis, replicated elsewhere — exactly the layout the
+            # batched local-update stage pins via its sharding constraint
+            specs = jax.tree.map(
+                lambda _: jax.sharding.PartitionSpec(self.axis_name), stacked
+            )
         wl, ws, wr = self._ring_w
         c, g, alpha = self.clusters.num_clients, self.cluster_size, self.alpha
         axis = self.axis_name
@@ -382,7 +388,7 @@ class CollectiveBackend:
 
         return shard_map_compat(
             agg, mesh=self.mesh,
-            in_specs=(self.param_specs, w_spec), out_specs=self.param_specs,
+            in_specs=(specs, w_spec), out_specs=specs,
         )(stacked, m_hat)
 
     # -- factors -------------------------------------------------------------

@@ -157,13 +157,17 @@ class ExecSpec:
     rounds_per_step: Optional[int] = None
     prefetch: Optional[bool] = None
     latency: Any = None
+    # None | "auto" | jax.sharding.Mesh — device mesh for the client axis;
+    # "auto" builds one iff the host has >= num_clients devices
+    mesh: Any = None
     extras: dict = dataclasses.field(default_factory=dict)
 
 
 _TOP_KEYS = ("num_clients", "num_clusters", "clusters", "seed")
 _FLEET_KEYS = ("profile", "profile_seed", "participation", "store")
 _EXEC_KEYS = ("scheduler", "backend", "topology", "tau1", "tau2", "alpha",
-              "learning_rate", "rounds_per_step", "prefetch", "latency")
+              "learning_rate", "rounds_per_step", "prefetch", "latency",
+              "mesh")
 _DATA_KEYS = ("dataset", "partition", "partition_params", "num_samples",
               "batch_size")
 

@@ -50,8 +50,34 @@ PyTree = Any
 __all__ = ["build_fl_round_step"]
 
 
+def _client_axis_constraint(backend):
+    """Sharding constraint pinning stacked client trees to the backend's mesh.
+
+    When the selected backend carries a ``jax.sharding.Mesh`` the local
+    update phase should run sharded over the clients axis (the same layout
+    the shard_map transition consumes), so the compiler never gathers the
+    stacked trees between the SGD micro-steps and the aggregation.  Off a
+    mesh this is the identity.
+    """
+    mesh = getattr(backend, "mesh", None)
+    if mesh is None:
+        return lambda tree: tree
+    axis = getattr(backend, "axis_name", None) or "data"
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def constrain(tree):
+        def leaf(x):
+            spec = PartitionSpec(axis, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return jax.tree.map(leaf, tree)
+
+    return constrain
+
+
 def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
-                        rounds_per_step: int = 1, participation: bool = False):
+                        rounds_per_step: int = 1, participation: bool = False,
+                        tile_m: int = 1024):
     """Returns round_step(params, opt_state, batches[, weights]) ->
     (params, opt_state, losses).
 
@@ -62,8 +88,14 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
     round(s).  With ``participation=True`` the step takes an extra
     ``weights`` operand of shape (rounds_per_step, C): round ``r``'s weight
     vector is applied to every intra/inter transition of that round.
+
+    The local-update phase is the shared batched stage from
+    ``core.local_update`` — one vmapped program per micro-step, routed
+    through the fused-SGD kernel (``tile_m`` tiles) when the backend is
+    Pallas and the optimizer is plain SGD.
     """
     from .backends import resolve_backend
+    from .local_update import build_local_update
 
     proto = fl.protocol()
     if backend is None:
@@ -72,17 +104,16 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
     if rounds_per_step < 1:
         raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
 
+    local_update = build_local_update(model, opt, backend=backend, tile_m=tile_m)
+    constrain = _client_axis_constraint(backend)
+
     def local_iter(carry, batch):
         params, opt_state = carry
-
-        def client_loss(p, b):
-            return model.loss(p, b)
-
-        loss, grads = jax.vmap(jax.value_and_grad(client_loss))(params, batch)
-        params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
-        return (params, opt_state), loss.mean()
+        params, opt_state, losses = local_update(params, opt_state, batch)
+        return (params, opt_state), losses.mean()
 
     def one_round(carry, batches, w=None):
+        carry = (constrain(carry[0]), carry[1])
         # batches leaves: (tau1 * tau2, C, b, ...) — exactly one round's worth;
         # ``w`` is that round's participation weight vector (None == the
         # backend's bound m^, the full-participation fast path)

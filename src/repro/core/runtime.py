@@ -295,9 +295,11 @@ class SyncScheduler:
 
     def __init__(self, cfg: SDFEELConfig, latency: Optional[LatencyModel] = None,
                  backend=None, profile=_UNSET, prefetch: bool = True,
-                 participation=_UNSET, fleet: Optional[FleetSpec] = None):
+                 participation=_UNSET, fleet: Optional[FleetSpec] = None,
+                 mesh=None):
         self.cfg = cfg
         self.latency = latency
+        self._mesh_spec = mesh
         self.fleet = _fleet_from_legacy(
             fleet, "SyncScheduler", profile=profile, participation=participation
         )
@@ -346,12 +348,24 @@ class SyncScheduler:
         spec = self._backend_spec
         if spec is None:
             spec = _legacy_impl_backend(cfg.aggregation_impl, agg_clusters, cfg.P())
-        self.backend = resolve_backend(spec, agg_clusters, cfg.P(), cfg.alpha)
-        lr = cfg.learning_rate
+        from ..launch.mesh import resolve_client_mesh
+
+        self.mesh = resolve_client_mesh(self._mesh_spec, agg_clusters.num_clients)
+        self.backend = resolve_backend(
+            spec, agg_clusters, cfg.P(), cfg.alpha, mesh=self.mesh
+        )
+        from .. import optim
+        from .local_update import build_local_update
+
+        # shared batched stage: one vmapped value_and_grad + SGD update per
+        # micro-step (fp32/bf16 math identical to the former inline p - lr*g)
+        local_stage = build_local_update(
+            model, optim.sgd(cfg.learning_rate), backend=self.backend
+        )
 
         def local_sgd(params, batch):
-            grads = jax.vmap(jax.grad(model.loss))(params, batch)
-            return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            params, _, _ = local_stage(params, (), batch)
+            return params
 
         def make_step(event):
             def fused(params, batch):
@@ -542,12 +556,13 @@ class RoundScheduler:
     def __init__(self, fl, optimizer=None, latency: Optional[LatencyModel] = None,
                  backend=None, profile=_UNSET, rounds_per_step: int = 1,
                  prefetch: bool = True, participation=_UNSET,
-                 fleet: Optional[FleetSpec] = None):
+                 fleet: Optional[FleetSpec] = None, mesh=None):
         if rounds_per_step < 1:
             raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
         self.fl = fl
         self.optimizer = optimizer
         self.latency = latency
+        self._mesh_spec = mesh
         self.fleet = _fleet_from_legacy(
             fleet, "RoundScheduler", profile=profile, participation=participation
         )
@@ -622,8 +637,11 @@ class RoundScheduler:
             # the compiled round engine historically always used dense;
             # honor impl="gossip" only where the collective path is valid
             spec = _legacy_impl_backend(fl.impl, agg_clusters, self._proto.P())
+        from ..launch.mesh import resolve_client_mesh
+
+        self.mesh = resolve_client_mesh(self._mesh_spec, agg_clusters.num_clients)
         self.backend = resolve_backend(
-            spec, agg_clusters, self._proto.P(), fl.alpha
+            spec, agg_clusters, self._proto.P(), fl.alpha, mesh=self.mesh
         )
         self._round_step = jax.jit(
             build_fl_round_step(model, opt, engine_fl, backend=self.backend,
@@ -1178,6 +1196,7 @@ def _make_sync(s: dict) -> SyncScheduler:
     return SyncScheduler(
         cfg, latency=s.pop("latency", None), backend=s.pop("backend", None),
         prefetch=s.pop("prefetch", True), fleet=fleet,
+        mesh=s.pop("mesh", None),
     )
 
 
@@ -1203,6 +1222,7 @@ def _make_round(s: dict) -> RoundScheduler:
         backend=s.pop("backend", None),
         rounds_per_step=s.pop("rounds_per_step", 1),
         prefetch=s.pop("prefetch", True), fleet=fleet,
+        mesh=s.pop("mesh", None),
     )
 
 

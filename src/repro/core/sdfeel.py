@@ -96,24 +96,29 @@ def build_fl_train_step(
     ``params``/``opt_state`` carry a leading client axis of size
     ``fl.num_clients``.  ``batch`` leaves are (C, per_client_batch, ...).
     ``event`` statically selects which Lemma-1 transition the step applies.
-    ``mesh``/``param_specs`` are required for the ``gossip`` impl
-    (``CollectiveBackend`` under shard_map).  With ``participation=True`` the
-    step takes a traced (C,) ``weights`` operand (a ``ParticipationPlan``
-    round vector) applied to the step's transition.
+    ``mesh`` is required for the ``gossip`` impl (``CollectiveBackend`` under
+    shard_map); ``param_specs`` is optional — when omitted the backend
+    shards every stacked leaf on its leading clients axis.  With
+    ``participation=True`` the step takes a traced (C,) ``weights`` operand
+    (a ``ParticipationPlan`` round vector) applied to the step's transition.
     """
+    from .local_update import build_local_update
+
     proto = fl.protocol()
 
     if fl.impl == "gossip" and event != "local":
         if fl.topology != "ring" or fl.num_clusters < 3:
             raise ValueError("gossip impl supports ring topologies with >= 3 clusters")
-        if mesh is None or param_specs is None:
-            raise ValueError("gossip impl needs mesh + param_specs")
+        if mesh is None:
+            raise ValueError("gossip impl needs a mesh")
         backend = resolve_backend(
             "collective", proto.clusters, proto.P(), fl.alpha,
             mesh=mesh, param_specs=param_specs,
         )
     else:
         backend = resolve_backend("dense", proto.clusters, proto.P(), fl.alpha)
+
+    batched_update = build_local_update(model, opt, backend=backend)
 
     def _local_update(params, opt_state, batch):
         def client_loss(p, b):
@@ -138,10 +143,11 @@ def build_fl_train_step(
                 return l * scale, jax.tree.map(lambda x: x * scale, g)
 
             loss, grads = jax.vmap(client_grads)(params, batch)
-        else:
-            loss, grads = jax.vmap(jax.value_and_grad(client_loss))(params, batch)
-        params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
-        return params, opt_state, loss
+            params, opt_state = jax.vmap(opt.update)(params, grads, opt_state)
+            return params, opt_state, loss
+        # single-microbatch path: the shared batched stage (one vmapped
+        # program, fused-SGD kernel when the backend selects it)
+        return batched_update(params, opt_state, batch)
 
     def train_step(params, opt_state, batch):
         params, opt_state, loss = _local_update(params, opt_state, batch)

@@ -1,10 +1,13 @@
-from .synthetic import SyntheticClassification, SyntheticLM, mnist_like, cifar_like
+from .synthetic import (
+    FederatedLM, SyntheticClassification, SyntheticLM, mnist_like, cifar_like,
+)
 from .partition import dirichlet_partition, skewed_label_partition, iid_partition
 from .loader import FederatedDataset, ClientBatcher, ProceduralFederated
 
 __all__ = [
     "SyntheticClassification",
     "SyntheticLM",
+    "FederatedLM",
     "mnist_like",
     "cifar_like",
     "dirichlet_partition",

@@ -12,7 +12,10 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["SyntheticClassification", "SyntheticLM", "mnist_like", "cifar_like"]
+__all__ = [
+    "SyntheticClassification", "SyntheticLM", "FederatedLM",
+    "mnist_like", "cifar_like",
+]
 
 
 @dataclasses.dataclass
@@ -100,3 +103,59 @@ class SyntheticLM:
             idx = rng.integers(0, n, size=batch_size)
             chunk = self.tokens[idx]
             yield {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}
+
+
+@dataclasses.dataclass
+class FederatedLM:
+    """Per-client Markov LM corpora for the federated-LM scenarios.
+
+    Each client holds its own ``SyntheticLM`` corpus drawn with a distinct
+    seed (distinct bigram structure -> non-IID across clients, the paper's
+    data-heterogeneity setting for token streams).  ``stacked_batch``
+    vectorizes the whole fleet's draw into one ``(C, b, S)`` gather — no
+    per-client Python loop — which is the contract
+    ``ScenarioRun.batch_source`` and the round/sync schedulers consume.
+    """
+
+    tokens: np.ndarray  # (C, N, S+1) int32
+    vocab_size: int
+
+    @staticmethod
+    def generate(
+        num_clients: int,
+        num_sequences: int,
+        seq_len: int,
+        vocab_size: int,
+        order_mix: float = 0.7,
+        seed: int = 0,
+    ) -> "FederatedLM":
+        corpora = [
+            SyntheticLM.generate(
+                num_sequences, seq_len, vocab_size, order_mix, seed=seed + 11 * i
+            ).tokens
+            for i in range(num_clients)
+        ]
+        return FederatedLM(tokens=np.stack(corpora), vocab_size=vocab_size)
+
+    @property
+    def num_clients(self) -> int:
+        return self.tokens.shape[0]
+
+    def data_sizes(self) -> np.ndarray:
+        return np.full(self.num_clients, self.tokens.shape[1], dtype=np.float64)
+
+    def stacked_batch(self, batch_size: int, rng) -> dict:
+        """One bulk draw for every client: leaves (C, batch_size, S)."""
+        c, n = self.tokens.shape[:2]
+        idx = rng.integers(0, n, size=(c, batch_size))
+        chunk = self.tokens[np.arange(c)[:, None], idx]
+        return {"tokens": chunk[:, :, :-1], "labels": chunk[:, :, 1:]}
+
+    def eval_batch(self, batch_size: int = 64, seed: int = 0) -> dict:
+        """Flat (B, S) batch mixing sequences from every client's corpus."""
+        rng = np.random.default_rng(seed)
+        c, n = self.tokens.shape[:2]
+        who = rng.integers(0, c, size=batch_size)
+        idx = rng.integers(0, n, size=batch_size)
+        chunk = self.tokens[who, idx]
+        return {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}

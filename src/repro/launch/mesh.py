@@ -12,10 +12,14 @@ initialization.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.sharding.rules import MeshAxes
 
-__all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes_for"]
+__all__ = [
+    "make_production_mesh", "make_test_mesh", "mesh_axes_for",
+    "make_client_mesh", "resolve_client_mesh",
+]
 
 
 def _auto_axis_types(n: int) -> dict:
@@ -38,6 +42,49 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None) -> jax
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
                              **_auto_axis_types(3))
     return jax.make_mesh((data, model), ("data", "model"), **_auto_axis_types(2))
+
+
+def make_client_mesh(num_clients: int, axis_name: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh spanning the federated client axis (one client per device).
+
+    This is the layout ``CollectiveBackend`` runs real shard_map collectives
+    on: stacked ``(C, ...)`` client trees shard one client per ``axis_name``
+    index.  Unlike ``jax.make_mesh`` this takes the first ``num_clients``
+    devices, so it works when the host exposes more devices than clients.
+    """
+    devices = jax.devices()
+    if len(devices) < num_clients:
+        raise ValueError(
+            f"client mesh needs {num_clients} devices, have {len(devices)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "jax initializes to emulate more on CPU)"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:num_clients]), (axis_name,))
+
+
+def resolve_client_mesh(spec, num_clients: int, axis_name: str = "data"):
+    """Resolve a run-config ``mesh`` field into a Mesh or None.
+
+    ``None`` -> no mesh (vmap emulation).  ``"auto"`` -> a client mesh iff
+    the host has at least ``num_clients`` devices, else None.  A Mesh is
+    validated (its ``axis_name`` axis must span the client axis one-to-one)
+    and passed through.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, jax.sharding.Mesh):
+        sizes = dict(zip(spec.axis_names, spec.devices.shape))
+        if sizes.get(axis_name) != num_clients:
+            raise ValueError(
+                f"mesh axis {axis_name!r} has size {sizes.get(axis_name)}, "
+                f"need one device per client ({num_clients})"
+            )
+        return spec
+    if spec == "auto":
+        if len(jax.devices()) >= num_clients:
+            return make_client_mesh(num_clients, axis_name)
+        return None
+    raise ValueError(f"mesh must be None, 'auto', or a jax Mesh, got {spec!r}")
 
 
 def mesh_axes_for(mesh: jax.sharding.Mesh) -> MeshAxes:

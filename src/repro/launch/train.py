@@ -39,6 +39,8 @@ def run_scenario(args) -> None:
         return
     sc = get_scenario(args.scenario)
     overrides = {"seed": args.seed, "backend": args.backend}
+    if args.mesh != "none":
+        overrides["mesh"] = args.mesh
     part = _participation_spec(args)
     if part is not None:
         overrides["participation"] = part
@@ -114,6 +116,10 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "dense", "pallas", "collective"],
                     help="aggregation backend for the Lemma-1 transition")
+    ap.add_argument("--mesh", default="none", choices=["none", "auto"],
+                    help="client device mesh: 'auto' shards the stacked "
+                         "client axis one-per-device (collective transitions "
+                         "run under shard_map) when enough devices exist")
     ap.add_argument("--participation", default=None,
                     choices=["full", "uniform-k", "availability", "trace"],
                     help="per-round client participation strategy "

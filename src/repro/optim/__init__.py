@@ -8,7 +8,7 @@ EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,9 @@ class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
     name: str = "optimizer"
+    # static learning rate, when the optimizer has one — lets fused update
+    # kernels (kernels/fused_sgd) bake it in as a compile-time constant
+    lr: Optional[float] = None
 
 
 def sgd(learning_rate: float) -> Optimizer:
@@ -39,7 +42,7 @@ def sgd(learning_rate: float) -> Optimizer:
         )
         return new, state
 
-    return Optimizer(init, update, "sgd")
+    return Optimizer(init, update, "sgd", lr=learning_rate)
 
 
 def momentum(learning_rate: float, beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:

@@ -46,7 +46,7 @@ class Scenario:
     name: str
     description: str
     scheduler: str                      # "sync" | "round" | "async"
-    dataset: str = "mnist"              # "mnist" | "cifar" | "procedural"
+    dataset: str = "mnist"              # "mnist" | "cifar" | "procedural" | "lm"
     partition: str = "label_skew"       # "iid" | "label_skew" | "dirichlet"
     partition_params: Optional[dict] = None
     topology: str = "ring"
@@ -66,11 +66,26 @@ class Scenario:
     theta_max: int = 8                  # async only
     batch_size: int = 10
     num_samples: int = 2400
+    arch: Optional[str] = None          # lm only: repro.configs name
+    arch_overrides: Optional[dict] = None  # lm only: ArchConfig field overrides
+    seq_len: int = 64                   # lm only
+    vocab_size: int = 512               # lm only (must match the arch's vocab)
 
     # -- building blocks -----------------------------------------------------
     def _model(self):
         from repro.models import CifarCNN, MnistCNN
 
+        if self.dataset == "lm":
+            from repro.configs import get_config
+            from repro.models import CausalLM
+
+            # reduced() shrinks the named family to test scale but keeps its
+            # dtype/remat knobs — arch_overrides pins precision per scenario
+            arch = get_config(self.arch or "granite-8b").reduced()
+            arch = dataclasses.replace(
+                arch, vocab_size=self.vocab_size, **(self.arch_overrides or {})
+            )
+            return CausalLM(arch)
         # procedural data is MNIST-shaped (28x28x1 class prototypes)
         return {"mnist": MnistCNN, "cifar": CifarCNN,
                 "procedural": MnistCNN}[self.dataset]()
@@ -78,8 +93,9 @@ class Scenario:
     def _latency(self):
         from repro.core import CIFAR_LATENCY, MNIST_LATENCY
 
+        # no §V-B measurement exists for the LM task — leave pacing off
         return {"mnist": MNIST_LATENCY, "cifar": CIFAR_LATENCY,
-                "procedural": MNIST_LATENCY}[self.dataset]
+                "procedural": MNIST_LATENCY, "lm": None}[self.dataset]
 
     def _partition(self, labels: np.ndarray, num_clients: int, seed: int):
         from repro.data import dirichlet_partition, iid_partition, skewed_label_partition
@@ -93,9 +109,20 @@ class Scenario:
             return skewed_label_partition(labels, num_clients, seed=seed, **params)
         raise KeyError(f"unknown partition {self.partition!r}")
 
-    def _env(self, num_clients: int, num_samples: int, seed: int):
+    def _env(self, num_clients: int, num_samples: int, seed: int,
+             seq_len: Optional[int] = None, vocab_size: Optional[int] = None):
         from repro.data import FederatedDataset, cifar_like, mnist_like
 
+        if self.dataset == "lm":
+            from repro.data import FederatedLM
+
+            ds = FederatedLM.generate(
+                num_clients, num_samples,
+                seq_len if seq_len is not None else self.seq_len,
+                vocab_size if vocab_size is not None else self.vocab_size,
+                seed=seed,
+            )
+            return ds, ds.eval_batch(64, seed=seed)
         if self.dataset == "procedural":
             from repro.data import ProceduralFederated
 
@@ -142,10 +169,21 @@ class Scenario:
         c = int(overrides.pop("num_clients", self.num_clients))
         d = int(overrides.pop("num_clusters", self.num_clusters))
         n = int(overrides.pop("num_samples", self.num_samples))
-        model = overrides.pop("model", None) or self._model()
+        seq_len = int(overrides.pop("seq_len", self.seq_len))
+        vocab_size = int(overrides.pop("vocab_size", self.vocab_size))
+        arch_overrides = overrides.pop("arch_overrides", None)
+        if arch_overrides is not None or vocab_size != self.vocab_size:
+            merged = dict(self.arch_overrides or {})
+            merged.update(arch_overrides or {})
+            template = dataclasses.replace(
+                self, vocab_size=vocab_size, arch_overrides=merged
+            )
+        else:
+            template = self
+        model = overrides.pop("model", None) or template._model()
         if c % d:
             raise ValueError(f"{self.name}: {c} clients do not divide into {d} clusters")
-        ds, eval_batch = self._env(c, n, seed)
+        ds, eval_batch = template._env(c, n, seed, seq_len, vocab_size)
         cfg: dict = {
             "scheduler": self.scheduler,
             "model": model,
@@ -306,6 +344,19 @@ register_scenario(Scenario(
                 "dispatch with batch prefetch (throughput lane).",
     scheduler="round", partition="iid", tau1=2, tau2=2, alpha=2,
     num_clients=8, rounds_per_step=4,
+))
+
+register_scenario(Scenario(
+    name="federated-lm-ring",
+    description="Federated LM: a reduced granite-family decoder (scanned "
+                "blocks, bf16 params/activations, remat) per client, non-IID "
+                "Markov corpora, whole-round compiled supersteps on a ring "
+                "of 4 edge servers.",
+    scheduler="round", dataset="lm",
+    num_clients=8, num_clusters=4, tau1=2, tau2=2, alpha=2,
+    rounds_per_step=2, learning_rate=0.1,
+    arch="granite-8b", batch_size=2, num_samples=1024,
+    seq_len=64, vocab_size=512,
 ))
 
 register_scenario(Scenario(

@@ -7,6 +7,8 @@ Checks:
   gossip_equivalence — structured ppermute aggregation == dense Lemma-1 einsum
   tiny_dryrun        — lower+compile train/prefill/serve on a 4x2 test mesh
   decode_sharded     — sequence-sharded LSE-merge decode == local decode
+  lm_collective_mesh — LM round: shard_map collective on a client mesh ==
+                       the single-device vmap emulation (auto param_specs)
 """
 import os
 import sys
@@ -127,9 +129,76 @@ def check_decode_sharded():
     print("decode_sharded OK")
 
 
+def check_lm_collective_mesh():
+    """Federated-LM round on a real client mesh == the vmap emulation.
+
+    The collective backend bound to a one-client-per-device mesh runs its
+    hypercube + ring transitions under shard_map with *derived* param_specs
+    (every stacked leaf sharded on the leading clients axis — the layout the
+    batched local-update stage pins).  The same round without a mesh runs
+    the single-device vmap emulation; trajectories must agree.
+    """
+    from repro import optim
+    from repro.core import FLSpec, init_stacked
+    from repro.core.backends import resolve_backend
+    from repro.core.round_engine import build_fl_round_step
+    from repro.data import FederatedLM
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import CausalLM
+    from repro.models.config import ArchConfig
+
+    C, SEQ, B = 8, 16, 2
+    cfg = ArchConfig(
+        name="spmd-lm", family="dense", num_layers=2, d_model=32, d_ff=64,
+        vocab_size=128, num_heads=2, num_kv_heads=1, head_dim=16,
+        dtype="float32", remat=False, attn_chunk=SEQ, tie_embeddings=True,
+    )
+    model = CausalLM(cfg)
+    fl = FLSpec(num_clients=C, num_clusters=4, tau1=2, tau2=1, alpha=1,
+                learning_rate=0.1, topology="ring")
+    proto = fl.protocol()
+    opt = optim.sgd(fl.learning_rate)
+
+    ds = FederatedLM.generate(C, 64, SEQ, 128, seed=0)
+    rng = np.random.default_rng(0)
+    draws = [ds.stacked_batch(B, rng) for _ in range(fl.tau1 * fl.tau2)]
+    window = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *draws)
+    params0 = init_stacked(model, C, jax.random.PRNGKey(0))
+
+    # emulation: no mesh -> jitted vmapped per-client transition
+    emu_backend = resolve_backend("collective", proto.clusters, proto.P(),
+                                  fl.alpha)
+    assert getattr(emu_backend, "mesh", None) is None
+    step_emu = jax.jit(build_fl_round_step(model, opt, fl, backend=emu_backend))
+    p_emu = params0
+    for _ in range(2):
+        p_emu, _, losses_emu = step_emu(p_emu, (), window)
+
+    # shard_map: one client per device, param_specs derived by the backend
+    mesh = make_client_mesh(C)
+    mesh_backend = resolve_backend("collective", proto.clusters, proto.P(),
+                                   fl.alpha, mesh=mesh)
+    assert mesh_backend.mesh is mesh and mesh_backend.param_specs is None
+    with mesh:
+        step_mesh = jax.jit(
+            build_fl_round_step(model, opt, fl, backend=mesh_backend)
+        )
+        p_mesh = params0
+        for _ in range(2):
+            p_mesh, _, losses_mesh = step_mesh(p_mesh, (), window)
+
+    np.testing.assert_allclose(
+        np.asarray(losses_emu), np.asarray(losses_mesh), atol=1e-6
+    )
+    for a, b in zip(jax.tree.leaves(p_emu), jax.tree.leaves(p_mesh)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    print("lm_collective_mesh OK")
+
+
 if __name__ == "__main__":
     {
         "gossip_equivalence": check_gossip_equivalence,
         "tiny_dryrun": check_tiny_dryrun,
         "decode_sharded": check_decode_sharded,
+        "lm_collective_mesh": check_lm_collective_mesh,
     }[sys.argv[1]]()

@@ -39,3 +39,9 @@ def test_tiny_dryrun_lowers_and_compiles():
 @pytest.mark.slow
 def test_sequence_sharded_decode_matches_local():
     run_check("decode_sharded")
+
+
+@pytest.mark.slow
+def test_lm_collective_mesh_matches_emulation():
+    """Federated-LM round under shard_map on a client mesh == vmap emulation."""
+    run_check("lm_collective_mesh")
