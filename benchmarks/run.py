@@ -21,7 +21,7 @@ def main() -> None:
     from . import (
         agg_backends, beyond_paper, cifar_task, figures, kernels_bench,
         lm_throughput, moe_ablation, participation, roofline_report,
-        straggler_wallclock, throughput,
+        serving_federated, straggler_wallclock, throughput,
     )
 
     registry = {
@@ -39,6 +39,7 @@ def main() -> None:
         "participation": participation.main,
         "throughput": throughput.main,
         "lm_throughput": lm_throughput.main,
+        "serving_federated": serving_federated.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,
         "cifar": cifar_task.main,

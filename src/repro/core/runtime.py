@@ -176,7 +176,7 @@ def stacked_init(model, num_copies: int, seed_or_key) -> PyTree:
 
 def _event_time(
     latency: Optional[LatencyModel], alpha: int, event: str, profile=None,
-    participants=None, clusters=None,
+    participants=None, clusters=None, t=None,
 ) -> float:
     """Per-iteration wall-clock of Section V-B for one sync protocol event.
 
@@ -187,13 +187,15 @@ def _event_time(
     ``clusters`` the event is priced along the per-cluster critical path
     (each edge server waits for *its own* slowest member + narrowest uplink)
     instead of the fleet-global envelope — see
-    ``FleetTiming.sync_event_time``.
+    ``FleetTiming.sync_event_time``.  ``t`` (the aggregation-round index)
+    prices a trace-scheduled fleet by that round's actual speeds and
+    availability instead of the trace's time average.
     """
     if profile is not None:
         from ..hetero import FleetTiming
 
         return FleetTiming(profile, latency).sync_event_time(
-            event, alpha, participants=participants, clusters=clusters
+            event, alpha, participants=participants, clusters=clusters, t=t
         )
     if latency is None:
         return 0.0
@@ -313,7 +315,11 @@ class SyncScheduler:
         self._pipeline_src = None
         self._round_cache = None  # (round, weights jnp, effective mask np)
         # §V-B per-event wall-clock depends only on construction args — price
-        # each event kind once instead of re-summing every step
+        # each event kind once instead of re-summing every step.  Fleets
+        # with a time-varying TraceSchedule are instead priced per round by
+        # that round's actual speeds (cached per round in _traced_event_time).
+        self._schedule = None if self.profile is None else self.profile.schedule
+        self._trace_cache = None  # (round, {event: dt})
         self._event_times = {
             e: _event_time(latency, cfg.alpha, e, self.profile,
                            clusters=cfg.clusters)
@@ -391,6 +397,14 @@ class SyncScheduler:
             return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, self._m), params)
 
         self._global_model = jax.jit(global_model)
+        self._v = jnp.asarray(cfg.clusters.V(), jnp.float32)
+
+        def cluster_model(params):
+            return jax.tree.map(
+                lambda w: jnp.einsum("c...,cd->d...", w, self._v), params
+            )
+
+        self._cluster_model = jax.jit(cluster_model)
 
     # -- participation plumbing ----------------------------------------------
     def _round_of(self, k: int) -> int:
@@ -424,13 +438,31 @@ class SyncScheduler:
             self._round_cache = (r, jnp.asarray(weights, jnp.float32), mask, {})
         return self._round_cache[1], self._round_cache[2], self._round_cache[3]
 
-    def _masked_event_time(self, event: str, mask, times: dict) -> float:
+    def _masked_event_time(self, event: str, mask, times: dict, r: int) -> float:
         if self.profile is None:
             return self._event_times[event]
         if event not in times:
             times[event] = _event_time(
                 self.latency, self.cfg.alpha, event, self.profile,
                 participants=mask, clusters=self.cfg.clusters,
+                t=r if self._schedule is not None else None,
+            )
+        return times[event]
+
+    def _traced_event_time(self, event: str, r: int) -> float:
+        """Round ``r``'s full-fleet pricing for trace-scheduled fleets.
+
+        Cached per round (at most three event kinds), so a trace adds one
+        ``FleetTiming`` reduction per event kind per round — the same
+        amortization the participation-masked path gets from its dt dict.
+        """
+        if self._trace_cache is None or self._trace_cache[0] != r:
+            self._trace_cache = (r, {})
+        times = self._trace_cache[1]
+        if event not in times:
+            times[event] = _event_time(
+                self.latency, self.cfg.alpha, event, self.profile,
+                clusters=self.cfg.clusters, t=r,
             )
         return times[event]
 
@@ -449,10 +481,11 @@ class SyncScheduler:
         if self._sampling:
             weights, mask, times = self._round_participation(k)
             self.params = self._step_fns[event](self.params, staged_batch, weights)
-            dt = self._masked_event_time(event, mask, times)
+            dt = self._masked_event_time(event, mask, times, self._round_of(k))
         else:
             self.params = self._step_fns[event](self.params, staged_batch)
-            dt = self._event_times[event]
+            dt = (self._traced_event_time(event, self._round_of(k))
+                  if self._schedule is not None else self._event_times[event])
         return event, dt
 
     def _apply_offload(self, k: int, event: str, staged_batch) -> tuple[str, float]:
@@ -464,10 +497,11 @@ class SyncScheduler:
         if self._sampling:
             weights, mask, times = self._round_participation(k)
             self._buffer = self._step_fns[event](self._buffer, staged_batch, weights)
-            dt = self._masked_event_time(event, mask, times)
+            dt = self._masked_event_time(event, mask, times, r)
         else:
             self._buffer = self._step_fns[event](self._buffer, staged_batch)
-            dt = self._event_times[event]
+            dt = (self._traced_event_time(event, r)
+                  if self._schedule is not None else self._event_times[event])
         if event == "inter":
             # round boundary: every resident's state is its cluster's
             # post-gossip aggregate — fully representable by the store
@@ -518,6 +552,20 @@ class SyncScheduler:
             return self.store.global_params()
         # mid-round: residents' live buffer + the store's cold majority
         return self.store.global_params(resident=self._res, buffer=self._buffer)
+
+    def cluster_params(self) -> PyTree:
+        """Stacked ``(D, ...)`` per-cluster models y^(d) = sum_{i in d} m^_i w^(i).
+
+        This is what ``serving.FederatedServer`` hot-swaps at round
+        boundaries — the personalized models the intra-cluster aggregation
+        maintains, as opposed to the ``global_params`` consensus.
+        """
+        if not self.store.resident:
+            raise NotImplementedError(
+                "cluster_params requires a resident client-state store; "
+                "serve host-offload runs from checkpoints instead"
+            )
+        return self._cluster_model(self.params)
 
 
 # ---------------------------------------------------------------------------
@@ -578,7 +626,9 @@ class RoundScheduler:
         self._pipeline_src = None
         self._res_cache = None  # (step k, Residency) — prefetch must agree
         self._proto = fl.protocol()
-        # §V-B wall-clock of one full round, priced once per event schedule
+        # §V-B wall-clock of one full round, priced once per event schedule;
+        # trace-scheduled fleets reprice per round in _round_time_at instead
+        self._schedule = None if self.profile is None else self.profile.schedule
         self._round_time = sum(
             _event_time(latency, fl.alpha, self._proto.event_at(i), self.profile,
                         clusters=self._proto.clusters)
@@ -665,14 +715,29 @@ class RoundScheduler:
         if self.profile is None:
             return self._round_time
         mask = self.plan.effective_mask(r)
-        return self._mask_round_time(mask)
+        return self._mask_round_time(
+            mask, t=r if self._schedule is not None else None
+        )
 
-    def _mask_round_time(self, mask) -> float:
+    def _mask_round_time(self, mask, t: Optional[int] = None) -> float:
         """Sum one round's schedule priced by ``mask``'s members — three
-        ``FleetTiming`` reductions, not ``tau1 * tau2``."""
+        ``FleetTiming`` reductions, not ``tau1 * tau2``.  ``t`` prices a
+        trace-scheduled fleet by round ``t``'s actual speeds."""
         times = {
             e: _event_time(self.latency, self.fl.alpha, e, self.profile,
-                           participants=mask, clusters=self._proto.clusters)
+                           participants=mask, clusters=self._proto.clusters, t=t)
+            for e in ("local", "intra", "inter")
+        }
+        return sum(
+            times[self._proto.event_at(i)]
+            for i in range(1, self.iterations_per_round + 1)
+        )
+
+    def _round_time_at(self, r: int) -> float:
+        """Full-fleet wall-clock of round ``r`` under a time-varying trace."""
+        times = {
+            e: _event_time(self.latency, self.fl.alpha, e, self.profile,
+                           clusters=self._proto.clusters, t=r)
             for e in ("local", "intra", "inter")
         }
         return sum(
@@ -752,7 +817,11 @@ class RoundScheduler:
             dt = self.rounds_per_step * self._round_time
         else:
             mask = res.participant_mask(self.fl.num_clients)
-            dt = self.rounds_per_step * self._mask_round_time(mask)
+            if self._schedule is not None:
+                dt = sum(self._mask_round_time(mask, t=r0 + i)
+                         for i in range(self.rounds_per_step))
+            else:
+                dt = self.rounds_per_step * self._mask_round_time(mask)
         return StepEvent(
             kind="round",
             iteration=k * self.iterations_per_step,
@@ -781,7 +850,12 @@ class RoundScheduler:
             self.params, self.opt_state, losses = self._round_step(
                 self.params, self.opt_state, stacked
             )
-            dt = self.rounds_per_step * self._round_time
+            if self._schedule is not None:
+                r0 = (k - 1) * self.rounds_per_step
+                dt = sum(self._round_time_at(r0 + i)
+                         for i in range(self.rounds_per_step))
+            else:
+                dt = self.rounds_per_step * self._round_time
         return StepEvent(
             kind="round",
             iteration=k * self.iterations_per_step,
@@ -795,6 +869,23 @@ class RoundScheduler:
             return self.store.global_params()
         m = jnp.asarray(self._proto.clusters.m(), jnp.float32)
         return jax.tree.map(lambda w: jnp.einsum("c...,c->...", w, m), self.params)
+
+    def cluster_params(self) -> PyTree:
+        """Stacked ``(D, ...)`` per-cluster models at the last round boundary.
+
+        Steps end on the inter-cluster gossip, so every client of cluster
+        ``d`` holds y^(d) and the V^T contraction is exact — this is the
+        stack ``serving.FederatedServer`` hot-swaps between batches.
+        """
+        if not self.store.resident:
+            raise NotImplementedError(
+                "cluster_params requires a resident client-state store; "
+                "serve host-offload runs from checkpoints instead"
+            )
+        v = jnp.asarray(self._proto.clusters.V(), jnp.float32)
+        return jax.tree.map(
+            lambda w: jnp.einsum("c...,cd->d...", w, v), self.params
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -1041,6 +1132,16 @@ class AsyncScheduler:
             return self.store.global_params()
         return self._global(self.y)
 
+    def cluster_params(self) -> PyTree:
+        """Stacked ``(D, ...)`` per-cluster models — the async state itself.
+
+        The event queue maintains ``y`` cluster-stacked (eq. 20-22 update it
+        in place), so personalized serving reads it directly; consumers that
+        outlive a step must copy (the next event donates these buffers),
+        which ``serving.FederatedServer.publish`` does.
+        """
+        return self.y
+
 
 # ---------------------------------------------------------------------------
 # The runtime
@@ -1080,6 +1181,21 @@ class FederationRuntime:
 
     def global_params(self) -> PyTree:
         return self.scheduler.global_params()
+
+    def cluster_params(self) -> PyTree:
+        """Stacked ``(D, ...)`` per-cluster personalized models.
+
+        The training→serving hook: ``serving.FederatedServer`` publishes
+        this stack at round boundaries to serve each edge cluster its own
+        model while training continues.
+        """
+        fn = getattr(self.scheduler, "cluster_params", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"scheduler {self.scheduler.name!r} does not expose "
+                "per-cluster models"
+            )
+        return fn()
 
     def evaluate(self, eval_batch) -> tuple[float, Optional[float]]:
         g = self.global_params()

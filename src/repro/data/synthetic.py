@@ -9,6 +9,7 @@ federated-LM example for the assigned architectures.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -119,6 +120,10 @@ class FederatedLM:
 
     tokens: np.ndarray  # (C, N, S+1) int32
     vocab_size: int
+    # set by generate_clustered: the per-cluster ground-truth successor
+    # tables and the client -> cluster map the corpora were drawn under
+    cluster_succ: Optional[np.ndarray] = None          # (D, V) int32
+    cluster_assignments: Optional[np.ndarray] = None   # (C,) int64
 
     @staticmethod
     def generate(
@@ -136,6 +141,52 @@ class FederatedLM:
             for i in range(num_clients)
         ]
         return FederatedLM(tokens=np.stack(corpora), vocab_size=vocab_size)
+
+    @staticmethod
+    def generate_clustered(
+        num_clients: int,
+        num_sequences: int,
+        seq_len: int,
+        vocab_size: int,
+        num_clusters: int,
+        noise: float = 0.05,
+        seed: int = 0,
+    ) -> "FederatedLM":
+        """Per-cluster corpora with *conflicting* successor permutations.
+
+        Every cluster gets its own permutation of the FULL vocabulary as a
+        successor table; a client's sequences follow its cluster's table
+        (with ``noise`` probability of a uniform token).  Because the
+        clusters disagree about the successor of the *same* states — not
+        merely occupy disjoint token ranges — no single consensus model can
+        satisfy them all: the personalization gap is structural, which is
+        what the federated-serving lane measures.  Client ``i`` belongs to
+        cluster ``i * D // C`` — the same contiguous layout ``ClusterSpec``
+        and the scenario registry use, so per-cluster models trained on
+        these corpora line up with ``cluster_assignments`` index-for-index.
+        """
+        if num_clients % num_clusters:
+            raise ValueError(
+                f"{num_clients} clients do not divide into {num_clusters} clusters"
+            )
+        rng = np.random.default_rng(seed)
+        succ = np.stack(
+            [rng.permutation(vocab_size) for _ in range(num_clusters)]
+        ).astype(np.int32)
+        assign = np.arange(num_clients) * num_clusters // num_clients
+        tokens = np.empty((num_clients, num_sequences, seq_len + 1), np.int32)
+        for i in range(num_clients):
+            d = int(assign[i])
+            state = rng.integers(0, vocab_size, size=num_sequences)
+            for t in range(seq_len + 1):
+                tokens[i, :, t] = state
+                nxt = succ[d, state]
+                rand = rng.integers(0, vocab_size, size=num_sequences)
+                state = np.where(rng.random(num_sequences) < noise, rand, nxt)
+        return FederatedLM(
+            tokens=tokens, vocab_size=vocab_size,
+            cluster_succ=succ, cluster_assignments=assign,
+        )
 
     @property
     def num_clients(self) -> int:

@@ -68,9 +68,29 @@ class FleetTiming:
     profile: DeviceProfile
     latency: Optional[LatencyModel] = None
 
+    # -- time-varying fleets -------------------------------------------------
+    def _effective_speeds(self, t: Optional[int]) -> np.ndarray:
+        """Availability-discounted pacing speeds, per round when traced.
+
+        A profile carrying a :class:`~repro.hetero.TraceSchedule` is priced
+        by the *round's actual row* — ``speeds_at(t)`` discounted by
+        ``availability_at(t)`` with the same ``1 / MAX_ATTEMPTS`` capped-
+        retry floor as the static path — instead of collapsing the trace to
+        its time average.  ``t`` is the aggregation-round index (the same
+        granularity ``ParticipationPlan("trace")`` replays); without a
+        schedule, or with ``t=None``, the static pricing is unchanged.
+        """
+        sched = self.profile.schedule
+        if t is None or sched is None:
+            return self.profile.effective_speeds()
+        return sched.speeds_at(t) * np.maximum(
+            sched.availability_at(t), 1.0 / MAX_ATTEMPTS
+        )
+
     # -- synchronous pacing --------------------------------------------------
     def sync_event_time(
-        self, event: str, alpha: int = 1, participants=None, clusters=None
+        self, event: str, alpha: int = 1, participants=None, clusters=None,
+        t: Optional[int] = None,
     ) -> float:
         """Per-iteration wall-clock of a synchronous step under this fleet.
 
@@ -96,10 +116,14 @@ class FleetTiming:
         plus the fleet-global worst uplink — an envelope that can charge a
         single round the slow CPU of one cluster *and* the narrow link of
         another, quantizing every sampled round to the same straggler bound.
+
+        ``t`` (optional round index) prices a trace-scheduled fleet by the
+        round's actual speeds/availability instead of the trace's time
+        average — see :meth:`_effective_speeds`.
         """
         if self.latency is None:
             return 0.0
-        eff = self.profile.effective_speeds()
+        eff = self._effective_speeds(t)
         bw = self.profile.bandwidths
         mask = None
         if participants is not None:

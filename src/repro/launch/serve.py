@@ -83,6 +83,40 @@ def generate(model: CausalLM, params, prompts: jax.Array, gen_len: int,
     return jnp.stack(outs, axis=1)
 
 
+def serve_scenario(name: str, *, train_steps: int = 4, requests: int = 16,
+                   max_batch: int = 8, gen: int = 16, seed: int = 0,
+                   arch_overrides=None, length_buckets=(16, 32, 64)):
+    """Close the training->serving loop for one named federated scenario.
+
+    Builds the scenario (it must use the ``lm-clustered`` corpus so the
+    trace knows each cluster's successor table), trains it for
+    ``train_steps`` scheduler steps, pulls the per-cluster models off the
+    live runtime via ``cluster_params()`` into a
+    :class:`~repro.serving.FederatedServer`, and replays a Zipf per-cluster
+    request trace against them.  Returns ``(server, done, history)``.
+    """
+    from repro.scenarios import build_scenario
+    from repro.serving import FederatedServer, synthetic_trace
+
+    overrides = {"seed": seed}
+    if arch_overrides:
+        overrides["arch_overrides"] = arch_overrides
+    run = build_scenario(name, **overrides)
+    history = run.run(train_steps)
+    server = FederatedServer(
+        run.runtime.model, runtime=run.runtime,
+        max_batch=max_batch, length_buckets=tuple(length_buckets),
+    )
+    trace = synthetic_trace(
+        run.dataset, num_requests=requests, prompt_lens=(8, 16),
+        max_new_tokens=gen, seed=seed,
+    )
+    for req in trace:
+        server.submit(req)
+    done = server.run()
+    return server, done, history
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
@@ -91,7 +125,26 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scenario", default=None,
+                    help="train this federated scenario briefly, then serve "
+                         "its per-cluster models (e.g. federated-lm-serving)")
+    ap.add_argument("--train-steps", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args(argv)
+
+    if args.scenario is not None:
+        server, done, _ = serve_scenario(
+            args.scenario, train_steps=args.train_steps,
+            requests=args.requests, max_batch=args.max_batch, gen=args.gen,
+        )
+        s = server.stats
+        print(f"scenario={args.scenario} clusters={server.num_clusters} "
+              f"requests={s.requests} batches={s.batches}")
+        print(f"{s.tokens_generated} tokens in {s.wall_s:.2f}s -> "
+              f"{s.tokens_per_s:.1f} tok/s, {s.requests_per_s:.2f} req/s "
+              f"(mean decode steps {s.mean_decode_steps:.1f})")
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

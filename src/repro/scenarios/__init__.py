@@ -46,7 +46,7 @@ class Scenario:
     name: str
     description: str
     scheduler: str                      # "sync" | "round" | "async"
-    dataset: str = "mnist"              # "mnist" | "cifar" | "procedural" | "lm"
+    dataset: str = "mnist"    # "mnist" | "cifar" | "procedural" | "lm" | "lm-clustered"
     partition: str = "label_skew"       # "iid" | "label_skew" | "dirichlet"
     partition_params: Optional[dict] = None
     topology: str = "ring"
@@ -75,7 +75,7 @@ class Scenario:
     def _model(self):
         from repro.models import CifarCNN, MnistCNN
 
-        if self.dataset == "lm":
+        if self.dataset in ("lm", "lm-clustered"):
             from repro.configs import get_config
             from repro.models import CausalLM
 
@@ -93,9 +93,10 @@ class Scenario:
     def _latency(self):
         from repro.core import CIFAR_LATENCY, MNIST_LATENCY
 
-        # no §V-B measurement exists for the LM task — leave pacing off
+        # no §V-B measurement exists for the LM tasks — leave pacing off
         return {"mnist": MNIST_LATENCY, "cifar": CIFAR_LATENCY,
-                "procedural": MNIST_LATENCY, "lm": None}[self.dataset]
+                "procedural": MNIST_LATENCY, "lm": None,
+                "lm-clustered": None}[self.dataset]
 
     def _partition(self, labels: np.ndarray, num_clients: int, seed: int):
         from repro.data import dirichlet_partition, iid_partition, skewed_label_partition
@@ -110,18 +111,25 @@ class Scenario:
         raise KeyError(f"unknown partition {self.partition!r}")
 
     def _env(self, num_clients: int, num_samples: int, seed: int,
-             seq_len: Optional[int] = None, vocab_size: Optional[int] = None):
+             seq_len: Optional[int] = None, vocab_size: Optional[int] = None,
+             num_clusters: Optional[int] = None):
         from repro.data import FederatedDataset, cifar_like, mnist_like
 
-        if self.dataset == "lm":
+        if self.dataset in ("lm", "lm-clustered"):
             from repro.data import FederatedLM
 
-            ds = FederatedLM.generate(
-                num_clients, num_samples,
-                seq_len if seq_len is not None else self.seq_len,
-                vocab_size if vocab_size is not None else self.vocab_size,
-                seed=seed,
-            )
+            sl = seq_len if seq_len is not None else self.seq_len
+            vs = vocab_size if vocab_size is not None else self.vocab_size
+            if self.dataset == "lm-clustered":
+                ds = FederatedLM.generate_clustered(
+                    num_clients, num_samples, sl, vs,
+                    num_clusters if num_clusters is not None else self.num_clusters,
+                    seed=seed,
+                )
+            else:
+                ds = FederatedLM.generate(
+                    num_clients, num_samples, sl, vs, seed=seed
+                )
             return ds, ds.eval_batch(64, seed=seed)
         if self.dataset == "procedural":
             from repro.data import ProceduralFederated
@@ -183,7 +191,7 @@ class Scenario:
         model = overrides.pop("model", None) or template._model()
         if c % d:
             raise ValueError(f"{self.name}: {c} clients do not divide into {d} clusters")
-        ds, eval_batch = template._env(c, n, seed, seq_len, vocab_size)
+        ds, eval_batch = template._env(c, n, seed, seq_len, vocab_size, d)
         cfg: dict = {
             "scheduler": self.scheduler,
             "model": model,
@@ -357,6 +365,19 @@ register_scenario(Scenario(
     rounds_per_step=2, learning_rate=0.1,
     arch="granite-8b", batch_size=2, num_samples=1024,
     seq_len=64, vocab_size=512,
+))
+
+register_scenario(Scenario(
+    name="federated-lm-serving",
+    description="Training-to-serving loop: clustered corpora whose per-cluster "
+                "successor tables CONFLICT on a shared vocabulary, compiled "
+                "round supersteps, and per-cluster personalized inference with "
+                "live weight hot-swap (repro.serving.FederatedServer).",
+    scheduler="round", dataset="lm-clustered",
+    num_clients=8, num_clusters=4, tau1=8, tau2=2, alpha=1,
+    rounds_per_step=1, learning_rate=0.3,
+    arch="granite-8b", batch_size=8, num_samples=256,
+    seq_len=32, vocab_size=32,
 ))
 
 register_scenario(Scenario(

@@ -1,3 +1,8 @@
 from .engine import Request, BatchServer, ServeStats
+from .federated import FederatedServer
+from .traffic import synthetic_trace, zipf_cluster_ids
 
-__all__ = ["Request", "BatchServer", "ServeStats"]
+__all__ = [
+    "Request", "BatchServer", "ServeStats",
+    "FederatedServer", "synthetic_trace", "zipf_cluster_ids",
+]

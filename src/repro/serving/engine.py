@@ -6,10 +6,16 @@ length (pad-to-bucket keeps the number of compiled prefill shapes small),
 right-sizes each batch to ``max_batch``, runs prefill + autoregressive
 decode through the ring-buffer caches, and returns per-request generations
 with throughput stats.  Early-stopped requests (EOS) are masked out of the
-returned text but decoded in lock-step (standard static-batch serving).
+returned text and — once *every* request in the batch has either hit its
+EOS or its token budget — the lock-step decode loop exits early, so a
+well-matched model that finishes its answers quickly also finishes its
+batches quickly (the mechanism ``benchmarks/serving_federated.py`` turns
+into queries/sec).
 
 On TPU the same engine runs with ``build_serve``'s sequence-sharded caches;
 here it drives reduced configs on CPU (see examples/serve_batched.py).
+``FederatedServer`` (``serving/federated.py``) reuses the queue/bucket/
+decode machinery with per-cluster model replicas.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ class Request:
     prompt: np.ndarray            # (S,) int32 token ids
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    cluster_id: Optional[int] = None  # FederatedServer routing key
     # filled by the server:
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0
@@ -44,8 +51,13 @@ class ServeStats:
     requests: int = 0
     batches: int = 0
     tokens_generated: int = 0
+    decode_steps: int = 0
     wall_s: float = 0.0
     occupancy_sum: float = 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / max(self.wall_s, 1e-9)
 
     @property
     def tokens_per_s(self) -> float:
@@ -55,12 +67,25 @@ class ServeStats:
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(self.batches, 1)
 
+    @property
+    def mean_decode_steps(self) -> float:
+        return self.decode_steps / max(self.batches, 1)
+
 
 def _bucket_len(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket holding an ``n``-token prompt.
+
+    Prompts longer than every bucket are a caller error: silently padding to
+    ``buckets[-1]`` would truncate context and decode garbage attention, so
+    the admission guard lives here (``submit`` delegates).
+    """
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    raise ValueError(
+        f"prompt of {n} tokens exceeds the largest length bucket "
+        f"{buckets[-1]}; add a bucket or truncate the prompt"
+    )
 
 
 class BatchServer:
@@ -87,32 +112,46 @@ class BatchServer:
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request):
-        if req.prompt.shape[-1] > self.buckets[-1]:
-            raise ValueError(f"prompt longer than the largest bucket {self.buckets[-1]}")
+        self._batch_key(req)  # validates against the largest bucket
         self._queue.append(req)
 
     def pending(self) -> int:
         return len(self._queue)
 
     # -- scheduling ----------------------------------------------------------
+    def _batch_key(self, req: Request):
+        """Co-batchability key: requests sharing a key share a batch."""
+        return _bucket_len(req.prompt.shape[-1], self.buckets)
+
     def _next_batch(self) -> list[Request]:
-        """Greedy: take the head request's bucket, fill with same-bucket reqs."""
+        """Greedy: take the head request's key, fill with same-key requests."""
         if not self._queue:
             return []
-        head = self._queue[0]
-        blen = _bucket_len(head.prompt.shape[-1], self.buckets)
+        head_key = self._batch_key(self._queue[0])
         batch, rest = [], deque()
         while self._queue and len(batch) < self.max_batch:
             r = self._queue.popleft()
-            if _bucket_len(r.prompt.shape[-1], self.buckets) == blen:
+            if self._batch_key(r) == head_key:
                 batch.append(r)
             else:
                 rest.append(r)
         self._queue.extendleft(reversed(rest))
         return batch
 
+    # -- model hooks (FederatedServer routes these per cluster) --------------
+    def _begin_batch(self, batch: list[Request]) -> None:
+        """Batch boundary: the only point where weights may change."""
+
+    def _run_prefill(self, batch: list[Request], toks: jnp.ndarray):
+        return self._prefill(self.params, {"tokens": toks})
+
+    def _run_decode(self, batch: list[Request], tok, cache, pos):
+        return self._decode(self.params, tok, cache, pos)
+
+    # -- execution -----------------------------------------------------------
     def _run_batch(self, batch: list[Request]):
         cfg = self.model.cfg
+        self._begin_batch(batch)
         t0 = time.time()
         blen = _bucket_len(max(r.prompt.shape[-1] for r in batch), self.buckets)
         gen = max(r.max_new_tokens for r in batch)
@@ -124,9 +163,8 @@ class BatchServer:
                             r.prompt.astype(np.int32)])
             for r in batch
         ])
-        pad_lens = np.array([blen - r.prompt.shape[-1] for r in batch])
 
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        logits, cache = self._run_prefill(batch, jnp.asarray(toks))
         cache = grow_caches(self.model, cache, blen + gen)
 
         def sample(logits, key):
@@ -135,15 +173,25 @@ class BatchServer:
                 return jnp.argmax(flat, axis=-1)
             return jax.random.categorical(key, flat / self.temperature, axis=-1)
 
+        eos = np.array([-1 if r.eos_id is None else r.eos_id for r in batch])
+        budget = np.array([r.max_new_tokens for r in batch])
+        done = np.zeros(b, dtype=bool)
         self._key, k0 = jax.random.split(self._key)
         tok = sample(logits[:, -1], k0)
         outs = []
         for i in range(gen):
-            outs.append(np.asarray(tok))
+            host_tok = np.asarray(tok)
+            outs.append(host_tok)
+            # a request is finished once it has emitted its EOS or spent its
+            # budget; when the whole batch is finished the lock-step loop
+            # stops — remaining iterations would only produce masked tokens
+            done |= (host_tok == eos) | (budget <= i + 1)
+            if done.all():
+                break
             self._key, ki = jax.random.split(self._key)
-            logits, cache = self._decode(self.params, tok, cache, jnp.int32(blen + i))
+            logits, cache = self._run_decode(batch, tok, cache, jnp.int32(blen + i))
             tok = sample(logits[:, -1], ki)
-        gen_tokens = np.stack(outs, axis=1)  # (B, gen)
+        gen_tokens = np.stack(outs, axis=1)  # (B, <=gen)
 
         dt = time.time() - t0
         n_tok = 0
@@ -159,6 +207,7 @@ class BatchServer:
         self.stats.requests += b
         self.stats.batches += 1
         self.stats.tokens_generated += n_tok
+        self.stats.decode_steps += len(outs)
         self.stats.wall_s += dt
         self.stats.occupancy_sum += b / self.max_batch
         return batch

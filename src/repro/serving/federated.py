@@ -1,0 +1,150 @@
+"""Per-cluster personalized serving: one engine, D model replicas, hot swap.
+
+In SD-FEEL the per-cluster models genuinely differ between inter-cluster
+aggregations — that divergence is the point of the intra/inter aggregation
+split — so serving every request from the consensus model throws away the
+personalization the protocol just paid for.  ``FederatedServer`` fronts one
+batched engine over ``D`` per-cluster replicas:
+
+* requests carry a ``cluster_id`` and the length-bucketed scheduler of
+  :class:`~repro.serving.engine.BatchServer` is generalized to bucket by
+  ``(cluster, padded_len)`` — a batch never mixes clusters, so lock-step
+  decode always runs against exactly one model;
+* the replicas live as ONE stacked ``(D, ...)`` parameter tree (the same
+  stacked-tree layout the round engine trains), and the jitted prefill /
+  decode programs take the *cluster index as a traced operand* — one
+  compiled program per bucket shape serves every cluster, no per-cluster
+  recompiles;
+* weights hot-swap from a live :class:`~repro.core.runtime.FederationRuntime`
+  through a double-buffered device slot: ``publish`` stages the new stack
+  into the inactive slot (the transfer overlaps in-flight decode) and the
+  server flips the active slot atomically at the next batch boundary, so
+  training and serving interleave in one process and a batch never sees a
+  half-written tree.
+
+``serving/traffic.py`` generates the synthetic per-cluster request mix the
+benchmark replays against this server.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .engine import BatchServer, Request, _bucket_len
+
+__all__ = ["FederatedServer"]
+
+
+def _copy_tree(tree):
+    """Own the buffers: schedulers donate their stacks on the next step."""
+    return jax.tree.map(lambda x: jnp.asarray(x).copy(), tree)
+
+
+class FederatedServer(BatchServer):
+    """Batched serving over stacked per-cluster model replicas.
+
+    ``cluster_params`` is a pytree whose leaves carry a leading ``(D, ...)``
+    cluster axis (``FederationRuntime.cluster_params()`` returns exactly
+    this).  Alternatively pass ``runtime=`` and the initial stack is pulled
+    from it; ``sync_from()`` then republishes at round boundaries.
+    """
+
+    def __init__(
+        self,
+        model,
+        cluster_params=None,
+        *,
+        runtime=None,
+        max_batch: int = 8,
+        length_buckets: tuple[int, ...] = (32, 64, 128),
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        if cluster_params is None:
+            if runtime is None:
+                raise ValueError("need cluster_params or a runtime to pull them from")
+            cluster_params = runtime.cluster_params()
+        super().__init__(
+            model, None, max_batch=max_batch, length_buckets=length_buckets,
+            temperature=temperature, seed=seed,
+        )
+        self._runtime = runtime
+        stack = _copy_tree(cluster_params)
+        self.num_clusters = int(jax.tree.leaves(stack)[0].shape[0])
+        # double buffer: slot[active] serves, slot[1 - active] receives
+        # publishes; the flip is a host-side index swap at a batch boundary
+        self._slots: list = [stack, None]
+        self._active = 0
+        self._pending = False
+        self.swaps = 0
+
+        def fed_prefill(stacked, d, batch):
+            p = jax.tree.map(lambda w: w[d], stacked)
+            return model.prefill(p, batch)
+
+        def fed_decode(stacked, d, tok, cache, pos):
+            p = jax.tree.map(lambda w: w[d], stacked)
+            return model.decode_step(p, tok, cache, pos)
+
+        # d is traced: one compiled program per bucket shape serves all D
+        # clusters (the gathered slice is a dynamic index into the stack)
+        self._fed_prefill = jax.jit(fed_prefill)
+        self._fed_decode = jax.jit(fed_decode)
+
+    # -- weight lifecycle ----------------------------------------------------
+    @property
+    def active_params(self):
+        """The stacked tree batches are currently decoding against."""
+        return self._slots[self._active]
+
+    def publish(self, cluster_params) -> None:
+        """Stage a new stacked tree; it becomes active at the next batch.
+
+        The copy/transfer happens now (overlapping any in-flight decode
+        dispatches); only the slot flip waits for the batch boundary, so a
+        running batch keeps bit-stable weights end to end.
+        """
+        stack = _copy_tree(cluster_params)
+        d = int(jax.tree.leaves(stack)[0].shape[0])
+        if d != self.num_clusters:
+            raise ValueError(
+                f"published stack has {d} clusters, server has {self.num_clusters}"
+            )
+        self._slots[1 - self._active] = stack
+        self._pending = True
+
+    def sync_from(self, runtime=None) -> None:
+        """Publish the attached (or given) runtime's current cluster models."""
+        rt = runtime or self._runtime
+        if rt is None:
+            raise ValueError("no runtime attached; pass one or construct with runtime=")
+        self.publish(rt.cluster_params())
+
+    def _begin_batch(self, batch) -> None:
+        if self._pending:
+            self._active = 1 - self._active
+            self._slots[1 - self._active] = None
+            self._pending = False
+            self.swaps += 1
+
+    # -- routing -------------------------------------------------------------
+    def submit(self, req: Request):
+        if req.cluster_id is None:
+            raise ValueError("FederatedServer requests must carry a cluster_id")
+        if not 0 <= req.cluster_id < self.num_clusters:
+            raise ValueError(
+                f"cluster_id {req.cluster_id} out of range [0, {self.num_clusters})"
+            )
+        super().submit(req)
+
+    def _batch_key(self, req: Request):
+        return (req.cluster_id, _bucket_len(req.prompt.shape[-1], self.buckets))
+
+    # -- model hooks ---------------------------------------------------------
+    def _run_prefill(self, batch, toks):
+        d = jnp.int32(batch[0].cluster_id)
+        return self._fed_prefill(self._slots[self._active], d, {"tokens": toks})
+
+    def _run_decode(self, batch, tok, cache, pos):
+        d = jnp.int32(batch[0].cluster_id)
+        return self._fed_decode(self._slots[self._active], d, tok, cache, pos)

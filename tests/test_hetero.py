@@ -321,3 +321,95 @@ def test_round_scheduler_profile_round_time():
     prof.bind(MnistCNN(), seed=0)
     assert prof.round_time() > 0
     assert prof.round_time() >= plain.round_time()
+
+
+# ---------------------------------------------------------------------------
+# Time-varying trace pricing: rounds pay their own row, not the average
+# ---------------------------------------------------------------------------
+
+def test_fleet_timing_prices_trace_rounds_individually():
+    from repro.hetero import TraceSchedule
+
+    n = 4
+    speeds = np.vstack([np.full(n, 4.0), np.full(n, 1.0)])
+    ones = np.ones((2, n))
+    prof = DeviceProfile(
+        speeds=speeds.mean(axis=0), availability=ones.mean(axis=0),
+        bandwidths=np.ones(n), schedule=TraceSchedule(speeds, ones),
+    )
+    ft = FleetTiming(prof, MNIST_LATENCY)
+    t0 = ft.sync_event_time("local", t=0)
+    t1 = ft.sync_event_time("local", t=1)
+    assert t1 == pytest.approx(4 * t0)             # the slow row costs 4x
+    assert ft.sync_event_time("local", t=2) == pytest.approx(t0)  # cycles
+    # t=None keeps the static time-average pricing bit-identical
+    static = DeviceProfile(speeds=speeds.mean(axis=0),
+                           availability=ones.mean(axis=0),
+                           bandwidths=np.ones(n))
+    assert ft.sync_event_time("local") == FleetTiming(
+        static, MNIST_LATENCY).sync_event_time("local")
+    # the round's availability row discounts that round's speeds
+    avail = np.vstack([np.full(n, 0.5), np.ones(n)])
+    flaky = DeviceProfile(
+        speeds=speeds.mean(axis=0), availability=avail.mean(axis=0),
+        bandwidths=np.ones(n), schedule=TraceSchedule(speeds, avail),
+    )
+    assert FleetTiming(flaky, MNIST_LATENCY).sync_event_time(
+        "local", t=0) == pytest.approx(2 * t0)
+
+
+def test_sync_scheduler_prices_trace_per_round():
+    """StepEvent.dt follows the trace row of the step's round."""
+    from repro.models import MnistCNN
+
+    rt = make_run({
+        "scheduler": "sync", "model": MnistCNN(),
+        "num_clients": 4, "num_clusters": 2, "topology": "ring",
+        "tau1": 1, "tau2": 1, "latency": MNIST_LATENCY,
+        "profile": {"kind": "trace",
+                    "speeds": [[4.0] * 4, [1.0] * 4],
+                    "availability": [[1.0] * 4, [1.0] * 4]},
+        "seed": 0,
+    })
+    rng = np.random.default_rng(0)
+
+    def batch(k):
+        return {"x": rng.normal(size=(4, 2, 28, 28, 1)).astype(np.float32),
+                "y": rng.integers(0, 10, size=(4, 2)).astype(np.int32)}
+
+    e1 = rt.scheduler.step(1, batch)    # round 0: fast row
+    e2 = rt.scheduler.step(2, batch)    # round 1: slow row
+    e3 = rt.scheduler.step(3, batch)    # round 2: trace cycles back
+    assert e2.dt > e1.dt
+    assert e3.dt == pytest.approx(e1.dt)
+    # compute term scales with the row's speed; comm terms are unchanged
+    assert e2.dt - e1.dt == pytest.approx(
+        MNIST_LATENCY.t_comp(1.0) - MNIST_LATENCY.t_comp(4.0))
+
+
+def test_round_scheduler_prices_trace_per_round():
+    from repro.core import RoundScheduler
+    from repro.core.sdfeel import FLSpec
+    from repro.models import MnistCNN
+
+    fl = FLSpec(num_clients=4, num_clusters=2, tau1=2, tau2=1, alpha=1)
+    prof = sample_profile(
+        {"kind": "trace", "speeds": [[4.0] * 4, [1.0] * 4],
+         "availability": [[1.0] * 4, [1.0] * 4]}, 4)
+    sched = RoundScheduler(fl, latency=MNIST_LATENCY, profile=prof,
+                           rounds_per_step=2)
+    sched.bind(MnistCNN(), seed=0)
+    r0, r1 = sched._round_time_at(0), sched._round_time_at(1)
+    assert r1 > r0
+    assert sched._round_time_at(2) == pytest.approx(r0)   # cycles
+    # the static average lies strictly between the two rows
+    assert r0 < sched.round_time() < r1
+    # a 2-round superstep is billed row by row, not 2x either row
+    rng = np.random.default_rng(0)
+
+    def batch(k):
+        return {"x": rng.normal(size=(4, 2, 28, 28, 1)).astype(np.float32),
+                "y": rng.integers(0, 10, size=(4, 2)).astype(np.int32)}
+
+    ev = sched.step(1, batch)
+    assert ev.dt == pytest.approx(r0 + r1)

@@ -440,3 +440,76 @@ def test_register_scheduler_plugin(fed_data):
         assert hist.loss[-1] < hist.loss[0] * 1.05
     finally:
         SCHEDULER_REGISTRY.pop("toy", None)
+
+
+# ---------------------------------------------------------------------------
+# cluster_params(): the per-cluster y^(d) stack the serving lane consumes
+# ---------------------------------------------------------------------------
+
+def _check_cluster_stack(runtime, m_tilde, num_clusters, atol=1e-5):
+    cp = runtime.cluster_params()
+    gp = runtime.global_params()
+    m_t = jnp.asarray(m_tilde, jnp.float32)
+    for y, g in zip(jax.tree.leaves(cp), jax.tree.leaves(gp)):
+        assert y.shape[0] == num_clusters
+        recon = jnp.einsum("d...,d->...", y, m_t.astype(y.dtype))
+        np.testing.assert_allclose(np.asarray(recon, np.float32),
+                                   np.asarray(g, np.float32), atol=atol)
+
+
+def test_sync_cluster_params_contract_to_global(fed_data):
+    """y^(d) = sum_{i in d} m^_i w^(i); the m~-weighted cluster stack must
+    reproduce global_params at any iteration."""
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    runtime = make_run({
+        "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "tau1": 2, "tau2": 2, "seed": 0,
+    })
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        runtime.step(lambda k: ds.stacked_batch(4, rng))
+    _check_cluster_stack(runtime, spec.m_tilde(), spec.num_clusters)
+
+
+def test_round_cluster_params_contract_to_global(fed_data):
+    ds, _ = fed_data
+    fl = FLSpec(num_clients=8, num_clusters=4, tau1=2, tau2=2,
+                learning_rate=0.05)
+    runtime = make_run({
+        "scheduler": "round", "model": MnistCNN(), "fl": fl, "seed": 0,
+    })
+    rng = np.random.default_rng(0)
+    batches = [ds.stacked_batch(4, rng) for _ in range(fl.tau1 * fl.tau2)]
+    runtime.step(lambda k: batches[k - 1])
+    proto = fl.protocol()
+    _check_cluster_stack(runtime, proto.clusters.m_tilde(),
+                         proto.clusters.num_clusters)
+
+
+def test_async_cluster_params_contract_to_global(fed_data):
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    runtime = make_run({
+        "scheduler": "async", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "speeds": make_speeds(8, heterogeneity=3.0),
+        "min_batches": 2, "seed": 0,
+    })
+    batcher = ClientBatcher(ds, 4, seed=0)
+    for _ in range(6):
+        runtime.step(batcher)
+    _check_cluster_stack(runtime, spec.m_tilde(), spec.num_clusters)
+
+
+def test_cluster_params_requires_resident_store(fed_data):
+    """Host-offload fleets serve from checkpoints, not the live store."""
+    ds, _ = fed_data
+    spec = _cluster_spec(ds)
+    runtime = make_run({
+        "scheduler": "sync", "model": MnistCNN(), "clusters": spec,
+        "topology": "ring", "tau1": 2, "tau2": 1, "seed": 0,
+        "participation": {"strategy": "uniform-k", "k": 1},
+        "store": {"kind": "host-offload", "k_max": 4},
+    })
+    with pytest.raises(NotImplementedError, match="resident"):
+        runtime.cluster_params()

@@ -1,11 +1,16 @@
 """Batch-serving engine tests."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models import CausalLM
-from repro.serving import BatchServer, Request
+from repro.models.config import ArchConfig
+from repro.serving import (
+    BatchServer, FederatedServer, Request, synthetic_trace, zipf_cluster_ids,
+)
+from repro.serving.engine import _bucket_len
 
 
 @pytest.fixture(scope="module")
@@ -70,3 +75,165 @@ def test_batched_greedy_matches_single(served):
         srv2.submit(r)
     srv2.run()
     np.testing.assert_array_equal(r1.output, r2.output)
+
+
+def test_overlong_prompt_rejected_at_submit(served):
+    cfg, model, params = served
+    srv = BatchServer(model, params, length_buckets=(32, 64))
+    rng = np.random.default_rng(3)
+    with pytest.raises(ValueError, match="exceeds the largest length bucket"):
+        srv.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 65),
+                           max_new_tokens=4))
+    assert srv.pending() == 0        # the bad request was never enqueued
+    with pytest.raises(ValueError, match="exceeds"):
+        _bucket_len(100, (32, 64))
+    assert _bucket_len(64, (32, 64)) == 64
+
+
+# ---------------------------------------------------------------------------
+# FederatedServer: per-cluster routing + double-buffered hot swap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_served():
+    cfg = ArchConfig(
+        name="test-fed", family="dense", num_layers=2, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=1, head_dim=16,
+        dtype="float32", remat=False, attn_chunk=16, tie_embeddings=True,
+    )
+    model = CausalLM(cfg)
+    replicas = [model.init(jax.random.PRNGKey(s)) for s in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas)
+    return cfg, model, stacked, replicas
+
+
+def _req(rng, cfg, uid, d, plen=12, gen=4):
+    return Request(uid=uid, prompt=rng.integers(0, cfg.vocab_size, plen),
+                   max_new_tokens=gen, cluster_id=d)
+
+
+def test_cluster_routing_matches_per_cluster_reference(fed_served):
+    """A cluster-d request decodes exactly as a server holding ONLY cluster
+    d's weights would — interleaved submissions never leak weights across
+    clusters."""
+    cfg, model, stacked, replicas = fed_served
+    rng = np.random.default_rng(0)
+    reqs = [_req(rng, cfg, uid, uid % 3) for uid in range(9)]
+    srv = FederatedServer(model, stacked, max_batch=4, length_buckets=(16,))
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    for d in range(3):
+        ref = BatchServer(model, replicas[d], max_batch=4, length_buckets=(16,))
+        mine = [r for r in reqs if r.cluster_id == d]
+        copies = [Request(uid=r.uid, prompt=r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens) for r in mine]
+        for c in copies:
+            ref.submit(c)
+        ref.run()
+        for got, want in zip(mine, copies):
+            np.testing.assert_array_equal(got.output, want.output)
+
+
+def test_batches_never_mix_clusters(fed_served):
+    cfg, model, stacked, _ = fed_served
+    rng = np.random.default_rng(1)
+    srv = FederatedServer(model, stacked, max_batch=8, length_buckets=(16,))
+    for uid in range(6):
+        srv.submit(_req(rng, cfg, uid, uid % 3))
+    seen = []
+    orig = srv._run_batch
+    srv._run_batch = lambda batch: (seen.append({r.cluster_id for r in batch}),
+                                    orig(batch))[1]
+    srv.run()
+    # same prompt bucket, room for all 6 in one batch — yet 3 batches, each
+    # a single cluster
+    assert len(seen) == 3 and all(len(s) == 1 for s in seen)
+
+
+def test_federated_requires_valid_cluster_id(fed_served):
+    cfg, model, stacked, _ = fed_served
+    rng = np.random.default_rng(2)
+    srv = FederatedServer(model, stacked, length_buckets=(16,))
+    with pytest.raises(ValueError, match="must carry a cluster_id"):
+        srv.submit(Request(uid=0, prompt=rng.integers(0, 64, 8)))
+    with pytest.raises(ValueError, match="out of range"):
+        srv.submit(_req(rng, cfg, 1, 3))
+
+
+def test_hotswap_flips_at_batch_boundary_and_matches_fresh_server(fed_served):
+    """publish() stages weights without touching the active slot; the flip
+    happens at the next batch boundary, after which decode output is
+    bitwise-identical to a server built fresh on the published stack."""
+    cfg, model, stacked, replicas = fed_served
+    rolled = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *(replicas[1:] + replicas[:1]))
+    rng = np.random.default_rng(3)
+    reqs = [_req(rng, cfg, uid, uid % 3, gen=5) for uid in range(6)]
+
+    srv = FederatedServer(model, stacked, max_batch=4, length_buckets=(16,))
+    for r in reqs:
+        srv.submit(Request(uid=r.uid, prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens,
+                           cluster_id=r.cluster_id))
+    srv.run()
+    before = srv.active_params
+    srv.publish(rolled)
+    assert srv.active_params is before       # staged, not yet active
+    assert srv.swaps == 0
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    assert srv.swaps == 1                     # flipped once, at the boundary
+
+    fresh = FederatedServer(model, rolled, max_batch=4, length_buckets=(16,))
+    copies = [Request(uid=r.uid, prompt=r.prompt.copy(),
+                      max_new_tokens=r.max_new_tokens, cluster_id=r.cluster_id)
+              for r in reqs]
+    for c in copies:
+        fresh.submit(c)
+    fresh.run()
+    for got, want in zip(reqs, copies):
+        np.testing.assert_array_equal(got.output, want.output)
+
+
+def test_publish_rejects_wrong_cluster_count(fed_served):
+    cfg, model, stacked, replicas = fed_served
+    srv = FederatedServer(model, stacked, length_buckets=(16,))
+    two = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas[:2])
+    with pytest.raises(ValueError, match="2 clusters"):
+        srv.publish(two)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic per-cluster traffic
+# ---------------------------------------------------------------------------
+
+def test_zipf_cluster_ids_skewed_and_deterministic():
+    a = zipf_cluster_ids(4, 400, seed=5)
+    b = zipf_cluster_ids(4, 400, seed=5)
+    np.testing.assert_array_equal(a, b)
+    assert set(np.unique(a)) <= set(range(4))
+    counts = np.bincount(a, minlength=4)
+    assert counts.max() > 2 * counts.min()    # a hot cluster exists
+
+
+def test_synthetic_trace_prompts_and_eos_follow_cluster_chain():
+    from repro.data import FederatedLM
+
+    ds = FederatedLM.generate_clustered(6, 16, 24, 32, 3, seed=0)
+    trace = synthetic_trace(ds, num_requests=20, prompt_lens=(8, 16),
+                            max_new_tokens=8, eos_horizon=2, seed=0)
+    assert len(trace) == 20
+    for r in trace:
+        assert 0 <= r.cluster_id < 3
+        assert r.prompt.shape[-1] in (8, 16)
+        # eos is the cluster chain's token two steps past the prompt
+        want = ds.cluster_succ[r.cluster_id][
+            ds.cluster_succ[r.cluster_id][int(r.prompt[-1])]
+        ]
+        assert r.eos_id == int(want)
+
+    plain = FederatedLM.generate(4, 8, 16, 32, seed=0)
+    with pytest.raises(ValueError, match="clustered"):
+        synthetic_trace(plain, num_requests=4)
