@@ -1,0 +1,221 @@
+"""Fault-tolerance lane: chaos-ring trace vs fault-free arm, one compile.
+
+The ``repro.faults`` subsystem compiles a declarative fault trace — link
+cuts, edge-server outages, client crashes, uplink drops — into per-round
+``(R, D, D)`` mixing matrices and ``(R, C)`` participation weights that
+enter the round engine as *traced operands*.  This benchmark proves the
+three claims that make that design worth having, on the ``chaos-ring``
+scenario (ring of 4 edge servers; a link cut, a server outage with eq-22
+staleness rejoin, a client crash and two uplink drops inside 10 rounds):
+
+* **bounded degradation** — the faulted arm trains through the whole trace
+  and its final eval loss stays within ``GAP_TOL`` of the fault-free arm
+  (disconnected components keep mixing within themselves; clusters behind
+  the dead server fall back to local-only rounds and re-enter by staleness
+  mixing);
+* **zero recompiles** — the entire ring -> line -> ring churn is served by
+  ONE compiled superstep (``_cache_size() == 1`` after the run), because
+  topology changes are data, not shapes;
+* **deterministic resume** — a run checkpointed *mid-outage* and restored
+  into a fresh runtime replays the remaining trace to bitwise-identical
+  fp32 parameters (``FaultSchedule`` is a pure function of the absolute
+  round index, and its spec rides in the checkpoint metadata).
+
+Results land in ``results/BENCH_fault_tolerance.json`` (schema + bounds
+asserted by the CI smoke step).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fault_tolerance
+    PYTHONPATH=src python -m benchmarks.fault_tolerance --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.scenarios import build_scenario
+
+from .common import RESULTS, ensure_results, timer
+
+JSON_PATH = os.path.join(RESULTS, "BENCH_fault_tolerance.json")
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+
+# required keys of one arm row / of the headline block (CI asserts these)
+ROW_KEYS = ("arm", "supersteps", "rounds", "final_eval_loss",
+            "mean_train_loss", "wallclock")
+HEADLINE_KEYS = ("loss_gap", "gap_bound", "recompiles", "resume_max_diff",
+                 "deterministic_resume", "wallclock_clean",
+                 "wallclock_faulted", "fault_events")
+
+SCENARIO = "chaos-ring"
+# |eval(faulted) - eval(clean)| bound: the chaos-ring trace crashes 1/8
+# clients, cuts one ring link for 4 rounds and takes one of 4 servers down
+# for 4 rounds — graceful degradation means the loss gap stays small, it
+# does not mean zero (the faulted arm genuinely loses updates)
+GAP_TOL = 0.5
+# checkpoint superstep: rounds 4-5 done, server 2 still down (rounds 4..7)
+RESUME_AT = 3
+BATCH_SEED = 20_000
+
+
+def _batch_source(dataset, batch_size: int):
+    """Deterministic per-iteration batches: resume replays the same stream.
+
+    The scenario's default source draws from one stateful rng, which a
+    fresh resumed runtime cannot rewind; keying the rng on the iteration
+    index makes batch ``i`` a pure function of ``i``.
+    """
+    return lambda i: dataset.stacked_batch(
+        batch_size, np.random.default_rng(BATCH_SEED + i)
+    )
+
+
+def _fresh(faulted: bool, seed: int = 0):
+    """A chaos-ring runtime (faulted or fault-free) + its batch source."""
+    overrides = {} if faulted else {"faults": None}
+    run = build_scenario(SCENARIO, seed=seed, **overrides)
+    return run, _batch_source(run.dataset, run.batch_size)
+
+
+def run_arm(faulted: bool, supersteps: int, seed: int = 0) -> tuple[dict, object]:
+    run, bs = _fresh(faulted, seed)
+    sched = run.runtime.scheduler
+    losses, clock = [], 0.0
+    for k in range(1, supersteps + 1):
+        ev = sched.step(k, bs)
+        clock += ev.dt
+        losses.append(np.asarray(ev.losses))
+    final_loss, _ = run.runtime.evaluate(run.eval_batch)
+    row = {
+        "arm": "faulted" if faulted else "clean",
+        "supersteps": supersteps,
+        "rounds": supersteps * sched.rounds_per_step,
+        "final_eval_loss": float(final_loss),
+        "mean_train_loss": float(np.concatenate(losses).mean()),
+        "wallclock": float(clock),
+    }
+    return row, sched
+
+
+def resume_check(reference, supersteps: int, seed: int = 0) -> float:
+    """Checkpoint mid-outage, restore into a fresh runtime, replay.
+
+    Returns the max |diff| between the resumed run's final stacked params
+    and ``reference`` (the uninterrupted faulted arm's) — 0.0 exactly when
+    the fault replay is deterministic.  The fault spec travels in the
+    checkpoint metadata and is cross-checked against the rebuilt schedule.
+    """
+    ckpt = tempfile.mkdtemp(prefix="fault_resume_")
+    try:
+        run, bs = _fresh(True, seed)
+        sched = run.runtime.scheduler
+        for k in range(1, RESUME_AT + 1):
+            sched.step(k, bs)
+        save_checkpoint(
+            ckpt, {"params": sched.params, "opt_state": sched.opt_state},
+            step=RESUME_AT,
+            metadata={"superstep": RESUME_AT,
+                      "faults": sched.faults.describe()},
+        )
+
+        run2, bs2 = _fresh(True, seed)
+        sched2 = run2.runtime.scheduler
+        state, manifest = restore_checkpoint(
+            ckpt, {"params": sched2.params, "opt_state": sched2.opt_state}
+        )
+        # identical replay requires the identical trace: the metadata copy
+        # must match what the fresh config rebuilt
+        assert manifest["metadata"]["faults"] == sched2.faults.describe(), (
+            "checkpointed fault spec does not match the rebuilt schedule"
+        )
+        sched2.params, sched2.opt_state = state["params"], state["opt_state"]
+        for k in range(RESUME_AT + 1, supersteps + 1):
+            sched2.step(k, bs2)
+        diffs = jax.tree.map(
+            lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                      - np.asarray(b, np.float32)).max()),
+            reference, sched2.params,
+        )
+        return max(jax.tree.leaves(diffs))
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+def main(smoke: bool = False) -> dict:
+    ensure_results()
+    elapsed = timer()
+    supersteps = 6 if smoke else (20 if FULL else 10)
+
+    clean, _ = run_arm(False, supersteps)
+    print(f"  clean    eval={clean['final_eval_loss']:.4f} "
+          f"wallclock={clean['wallclock']:8.1f}s")
+    faulted, sched_f = run_arm(True, supersteps)
+    print(f"  faulted  eval={faulted['final_eval_loss']:.4f} "
+          f"wallclock={faulted['wallclock']:8.1f}s")
+
+    # one compiled superstep served the whole ring->line->ring fault trace
+    recompiles = sched_f._round_step._cache_size() - 1
+
+    resume_max_diff = resume_check(sched_f.params, supersteps)
+    print(f"  resume   max|diff|={resume_max_diff:.3g} "
+          f"(checkpoint at superstep {RESUME_AT}, mid-outage)")
+
+    loss_gap = abs(faulted["final_eval_loss"] - clean["final_eval_loss"])
+    headline = {
+        "loss_gap": loss_gap,
+        "gap_bound": GAP_TOL,
+        "recompiles": int(recompiles),
+        "resume_max_diff": resume_max_diff,
+        "deterministic_resume": resume_max_diff == 0.0,
+        "wallclock_clean": clean["wallclock"],
+        "wallclock_faulted": faulted["wallclock"],
+        "fault_events": len(sched_f.faults.describe()["events"]),
+    }
+    payload = {
+        "config": {
+            "scenario": SCENARIO, "supersteps": supersteps,
+            "resume_at": RESUME_AT, "gap_tol": GAP_TOL,
+            "faults": sched_f.faults.describe(),
+            "smoke": smoke, "full": FULL,
+        },
+        "rows": [clean, faulted],
+        "headline": headline,
+        "bench_seconds": elapsed(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {JSON_PATH}")
+    print(f"  headline: loss_gap={loss_gap:.4f} (bound {GAP_TOL}), "
+          f"recompiles={recompiles}, "
+          f"resume {'bitwise' if resume_max_diff == 0.0 else 'DIVERGED'}")
+
+    assert loss_gap <= GAP_TOL, (
+        f"faulted arm degraded beyond the bound: gap {loss_gap:.4f} > {GAP_TOL}"
+    )
+    assert recompiles == 0, (
+        f"fault trace recompiled the round step {recompiles} time(s)"
+    )
+    assert resume_max_diff == 0.0, (
+        f"mid-outage resume diverged: max|diff| {resume_max_diff:.3g}"
+    )
+    # uplink retries and the outage are priced: faults cost wall-clock
+    assert faulted["wallclock"] > clean["wallclock"], (
+        faulted["wallclock"], clean["wallclock"],
+    )
+    return headline
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for the CI schema/bounds gate")
+    main(smoke=ap.parse_args().smoke)

@@ -25,6 +25,15 @@ the result through here, so changing who participates changes array
 bound at construction (the full-participation fast path, bit-identical to
 the pre-participation code).
 
+``transition``'s optional ``p`` is the same trick on the *topology* axis: a
+traced per-call (D, D) mixing matrix that replaces the one bound at
+construction for this call's inter-cluster stage (``repro.faults`` compiles
+each round's surviving edge set into exactly this operand), so link
+failures, ring→line rewires and server outages change values — never the
+compiled program.  ``p=None`` keeps the statically-bound matrix and is
+bitwise the pre-fault code path; ``p`` is ignored for ``intra``/``local``
+events (they do not mix across clusters).
+
 Registered implementations:
 
 =================  ==========================================================
@@ -102,6 +111,7 @@ class AggregationBackend(Protocol):
     def transition(
         self, stacked: PyTree, event: AggregationEvent,
         weights: Optional[jax.Array] = None,
+        p: Optional[jax.Array] = None,
     ) -> PyTree: ...
 
 
@@ -173,6 +183,22 @@ class DenseBackend:
 
         self._apply_weighted = _apply_weighted
 
+        # per-call mixing matrices (the fault/churn axis): P_r enters as a
+        # traced operand, P_r^alpha and the (D, C) right factor are computed
+        # on device — same einsum shape as the static path, so churn never
+        # recompiles.  alpha is static (closure), matrix_power unrolls.
+        m_hat_full = jnp.asarray(clusters.m_hat(), jnp.float32)
+
+        @jax.jit
+        def _apply_inter_p(stacked, weights, p_call):
+            p_a = jnp.linalg.matrix_power(p_call.astype(jnp.float32), alpha)
+            m_event = p_a @ self._m_event["intra"]          # P_r^a @ B: (D, C)
+            v = self._b_ind * weights.astype(jnp.float32)[:, None]
+            return apply_transition_dense(stacked, v @ m_event)
+
+        self._apply_inter_p = _apply_inter_p
+        self._m_hat_full = m_hat_full
+
         # matrix_power on the tiny (D, D) P, then ONE tree sweep — not alpha
         # full HBM passes over the model
         self._inter = jax.jit(
@@ -187,9 +213,13 @@ class DenseBackend:
         return self._inter(y, jnp.asarray(p), alpha=alpha)
 
     def transition(self, stacked: PyTree, event: AggregationEvent,
-                   weights: Optional[jax.Array] = None) -> PyTree:
+                   weights: Optional[jax.Array] = None,
+                   p: Optional[jax.Array] = None) -> PyTree:
         if event == "local":
             return stacked
+        if p is not None and event == "inter":
+            w = self._m_hat_full if weights is None else weights
+            return self._apply_inter_p(stacked, w, jnp.asarray(p, jnp.float32))
         if weights is None:
             return self._apply(stacked, self._t[event])
         return self._apply_weighted(stacked, weights, self._m_event[event])
@@ -249,7 +279,8 @@ class PallasBackend:
         )
 
     def transition(self, stacked: PyTree, event: AggregationEvent,
-                   weights: Optional[jax.Array] = None) -> PyTree:
+                   weights: Optional[jax.Array] = None,
+                   p: Optional[jax.Array] = None) -> PyTree:
         from repro.kernels import fused_transition_tree
 
         if event == "local":
@@ -264,8 +295,13 @@ class PallasBackend:
             # bt.T is the exact 0/1 indicator, so vt rows carry w verbatim
             # and the same fused kernel serves every participation draw
             vt = self._bt.T * weights.astype(jnp.float32)[None, :]
+        # the fused kernel's P is already a traced operand — a per-round
+        # faulted mixing matrix substitutes values into the same program
+        p_call = self._p if p is None or event != "inter" else jnp.asarray(
+            p, jnp.float32
+        )
         return fused_transition_tree(
-            stacked, vt, self._p, self._bt, alpha=alpha,
+            stacked, vt, p_call, self._bt, alpha=alpha,
             interpret=self.interpret, tile_m=self.tile_m,
         )
 
@@ -338,12 +374,33 @@ class CollectiveBackend:
         self._ring_w = tuple(jnp.asarray(w, jnp.float32) for w in (w_l, w_s, w_r))
         self._m_hat = jnp.asarray(clusters.m_hat(), jnp.float32)
 
+    def _ring_stencil(self, p: jax.Array) -> tuple:
+        """Per-cluster (w_left, w_self, w_right) gathered from a traced P.
+
+        The device-side twin of ``ring_mixing_weights``: column ``d`` of a
+        ring-stencil matrix holds exactly the three weights cluster ``d``'s
+        gossip update uses, so a per-round faulted matrix (downed ring links
+        zero their entries; the component renormalization moves the mass to
+        ``w_self``) becomes three traced (D,) vectors and the same ppermute
+        program.  Support off the ring stencil cannot be checked on traced
+        values — ``FaultSchedule.mixing_stack(require_ring_stencil=True)``
+        validates host-side before the stack is shipped.
+        """
+        d = self.clusters.num_clusters
+        idx = jnp.arange(d)
+        p = jnp.asarray(p, jnp.float32)
+        return p[(idx - 1) % d, idx], p[idx, idx], p[(idx + 1) % d, idx]
+
     # -- full Lemma-1 transition, (C, ...) -> (C, ...) -----------------------
     def transition(self, stacked: PyTree, event: AggregationEvent,
-                   weights: Optional[jax.Array] = None) -> PyTree:
+                   weights: Optional[jax.Array] = None,
+                   p: Optional[jax.Array] = None) -> PyTree:
         if event == "local":
             return stacked
-        wl, ws, wr = self._ring_w
+        if p is None or event != "inter":
+            wl, ws, wr = self._ring_w
+        else:
+            wl, ws, wr = self._ring_stencil(p)
         c = self.clusters.num_clients
         # the per-client weight is already a traced operand of the weighted
         # all-reduce; participation just substitutes the round's vector
@@ -351,6 +408,9 @@ class CollectiveBackend:
             weights, jnp.float32
         )
         if self.mesh is not None:
+            if p is not None and event == "inter":
+                return self._shard_map_transition_p(stacked, event, m_hat,
+                                                    (wl, ws, wr))
             return self._shard_map_transition(stacked, event, m_hat)
         return _vmapped_transition(
             stacked, m_hat, wl, ws, wr,
@@ -390,6 +450,44 @@ class CollectiveBackend:
             agg, mesh=self.mesh,
             in_specs=(specs, w_spec), out_specs=specs,
         )(stacked, m_hat)
+
+    def _shard_map_transition_p(self, stacked: PyTree, event: AggregationEvent,
+                                m_hat: jax.Array, ring_w: tuple) -> PyTree:
+        """Mesh transition with *traced* ring weights (the fault/churn path).
+
+        A sibling of ``_shard_map_transition`` rather than a parameter of it:
+        the fault-free method closes over the statically-bound stencil and
+        stays bitwise-identical to pre-fault code, while this one threads the
+        per-round (D,) vectors through as replicated shard_map operands.
+        """
+        from repro.sharding.compat import shard_map_compat
+
+        specs = self.param_specs
+        if specs is None:
+            specs = jax.tree.map(
+                lambda _: jax.sharding.PartitionSpec(self.axis_name), stacked
+            )
+        c, g, alpha = self.clusters.num_clients, self.cluster_size, self.alpha
+        axis = self.axis_name
+        w_spec = jax.sharding.PartitionSpec(axis)
+        rep = jax.sharding.PartitionSpec()
+
+        def agg(tree, m_hat_shard, wl, ws, wr):
+            w = m_hat_shard.reshape(())  # (1,) shard -> scalar
+
+            def per_leaf(x):
+                y = hypercube_cluster_allreduce(x, axis, c, g, w)
+                if event == "inter":
+                    y = ring_gossip(y, axis, c, g, wl, ws, wr, alpha)
+                return y.astype(x.dtype)
+
+            return jax.tree.map(per_leaf, tree)
+
+        wl, ws, wr = ring_w
+        return shard_map_compat(
+            agg, mesh=self.mesh,
+            in_specs=(specs, w_spec, rep, rep, rep), out_specs=specs,
+        )(stacked, m_hat, wl, ws, wr)
 
     # -- factors -------------------------------------------------------------
     def intra_cluster(self, stacked: PyTree, weights: jax.Array) -> PyTree:

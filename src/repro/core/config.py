@@ -106,6 +106,9 @@ class FleetSpec:
     ``profile_seed``    ``profile_seed=``
     ``participation``   ``participation=`` (``repro.participation`` spec)
     ``store``           *new* — ``repro.state`` client-state store spec
+    ``faults``          *new* — ``repro.faults`` fault-injection spec: an
+                        event list, ``{"events": [...], "psi": ...}`` dict,
+                        JSON string, or a built ``FaultSchedule``
     ==================  =====================================================
     """
 
@@ -113,6 +116,7 @@ class FleetSpec:
     profile_seed: Optional[int] = None
     participation: Any = None
     store: Any = None
+    faults: Any = None
 
     def resolve_profile(self, num_clients: int):
         """Materialize the ``DeviceProfile`` (or None) for this fleet size."""
@@ -132,7 +136,8 @@ class FleetSpec:
 
     def is_default(self) -> bool:
         return (self.profile is None and self.profile_seed is None
-                and self.participation is None and self.store is None)
+                and self.participation is None and self.store is None
+                and self.faults is None)
 
 
 @dataclasses.dataclass
@@ -164,7 +169,7 @@ class ExecSpec:
 
 
 _TOP_KEYS = ("num_clients", "num_clusters", "clusters", "seed")
-_FLEET_KEYS = ("profile", "profile_seed", "participation", "store")
+_FLEET_KEYS = ("profile", "profile_seed", "participation", "store", "faults")
 _EXEC_KEYS = ("scheduler", "backend", "topology", "tau1", "tau2", "alpha",
               "learning_rate", "rounds_per_step", "prefetch", "latency",
               "mesh")
@@ -287,6 +292,31 @@ class RunConfig:
                     f"unknown state store {kind!r}; registered: "
                     f"{sorted(STORE_REGISTRY)}"
                 )
+        faults = self.fleet.faults
+        if faults is not None:
+            from ..faults import FaultSchedule, validate_fault_events
+
+            if not isinstance(faults, FaultSchedule):
+                import json
+
+                spec = faults
+                if isinstance(spec, str):
+                    try:
+                        spec = json.loads(spec)
+                    except json.JSONDecodeError as e:
+                        raise ValueError(
+                            f"fleet.faults JSON string is malformed: {e}"
+                        ) from e
+                if isinstance(spec, dict):
+                    spec = spec.get("events", [])
+                if not isinstance(spec, (list, tuple)):
+                    raise TypeError(
+                        f"fleet.faults must be an event list, spec dict, JSON "
+                        f"string or FaultSchedule, got {type(faults).__name__}"
+                    )
+                # structural validation (kinds, operands, windows); size
+                # bounds are checked at resolve time when D/C are known
+                validate_fault_events(spec)
         if self.clusters is not None and (
             self.num_clients is not None or self.num_clusters is not None
         ):
@@ -307,6 +337,8 @@ class RunConfig:
                 return {str(k): safe(x) for k, x in v.items()}
             if isinstance(v, (list, tuple)):
                 return [safe(x) for x in v]
+            if hasattr(v, "describe"):  # FaultSchedule and friends
+                return safe(v.describe())
             return repr(v)
 
         return {

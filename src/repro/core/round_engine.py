@@ -33,6 +33,15 @@ drawn subset (or ``k``) changes values only, never the compiled program —
 and passing each round's full-participation ``m^`` vector reproduces the
 ``participation=False`` trajectory (tests/test_participation.py).
 
+With ``mixing=True`` (requires ``participation=True``) the step gains a
+fifth operand: a stacked ``(rounds_per_step, D, D)`` per-round mixing-matrix
+stack (one faulted/churned eq-5 matrix per round, compiled by
+``repro.faults.FaultSchedule.mixing_stack``), scanned alongside the batches
+and weights and threaded into each round's *inter* transition.  Like the
+weights, the stack is a traced input — link failures, ring→line rewires and
+server outages substitute matrix values into one compiled program, never
+triggering a recompile (tests/test_faults.py).
+
 The training driver for this engine is ``runtime.RoundScheduler`` — this
 module only builds the compiled round step.
 """
@@ -77,7 +86,7 @@ def _client_axis_constraint(backend):
 
 def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
                         rounds_per_step: int = 1, participation: bool = False,
-                        tile_m: int = 1024):
+                        mixing: bool = False, tile_m: int = 1024):
     """Returns round_step(params, opt_state, batches[, weights]) ->
     (params, opt_state, losses).
 
@@ -87,7 +96,9 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
     Lemma-1 einsum); its traced ``transition`` is inlined into the compiled
     round(s).  With ``participation=True`` the step takes an extra
     ``weights`` operand of shape (rounds_per_step, C): round ``r``'s weight
-    vector is applied to every intra/inter transition of that round.
+    vector is applied to every intra/inter transition of that round.  With
+    ``mixing=True`` a further ``mixing`` operand of shape
+    (rounds_per_step, D, D) supplies round ``r``'s inter-cluster matrix.
 
     The local-update phase is the shared batched stage from
     ``core.local_update`` — one vmapped program per micro-step, routed
@@ -103,6 +114,11 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
     tau1, tau2 = fl.tau1, fl.tau2
     if rounds_per_step < 1:
         raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
+    if mixing and not participation:
+        # the fault path always renormalizes per-round weights (crashed
+        # clients leave the reduce), so a mixing stack without a weights
+        # stack has no caller; keeping one signature shape per flag combo
+        raise ValueError("mixing=True requires participation=True")
 
     local_update = build_local_update(model, opt, backend=backend, tile_m=tile_m)
     constrain = _client_axis_constraint(backend)
@@ -112,7 +128,7 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
         params, opt_state, losses = local_update(params, opt_state, batch)
         return (params, opt_state), losses.mean()
 
-    def one_round(carry, batches, w=None):
+    def one_round(carry, batches, w=None, p=None):
         carry = (constrain(carry[0]), carry[1])
         # batches leaves: (tau1 * tau2, C, b, ...) — exactly one round's worth;
         # ``w`` is that round's participation weight vector (None == the
@@ -133,7 +149,7 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
         # aggregate re-aggregates to itself): T_intra @ T_inter = T_inter.
         # Under participation both factors use the same per-round weights, so
         # the composition stays exact round by round.
-        params = backend.transition(params, "inter", weights=w)
+        params = backend.transition(params, "inter", weights=w, p=p)
         return (params, opt_state), losses.reshape(tau1 * tau2)
 
     ipr = tau1 * tau2
@@ -173,6 +189,30 @@ def build_fl_round_step(model, opt: Optimizer, fl: FLSpec, backend=None,
         )
         return params, opt_state, losses.reshape(rounds_per_step * ipr)
 
+    def round_step_pm(params, opt_state, batches, weights, mixing):
+        # weights: (1, C); mixing: (1, D, D)
+        (params, opt_state), losses = one_round(
+            (params, opt_state), batches, weights[0], mixing[0]
+        )
+        return params, opt_state, losses
+
+    def superstep_pm(params, opt_state, batches, weights, mixing):
+        # mixing: (rounds_per_step, D, D), scanned in step with each round
+        rounds = jax.tree.map(
+            lambda x: x.reshape((rounds_per_step, ipr) + x.shape[1:]), batches
+        )
+
+        def body(carry, xs):
+            round_batches, w, p = xs
+            return one_round(carry, round_batches, w, p)
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (rounds, weights, mixing)
+        )
+        return params, opt_state, losses.reshape(rounds_per_step * ipr)
+
+    if mixing:
+        return round_step_pm if rounds_per_step == 1 else superstep_pm
     if participation:
         return round_step_p if rounds_per_step == 1 else superstep_p
     return round_step if rounds_per_step == 1 else superstep

@@ -311,9 +311,16 @@ class SyncScheduler:
         self._backend_spec = backend
         self.plan = None
         self.store = None
+        self.faults = None
         self._pipeline = None
         self._pipeline_src = None
         self._round_cache = None  # (round, weights jnp, effective mask np)
+        self._fault_cache = None  # (round, weights, mask, p, penalty, dts)
+        self._timing = None
+        if self.profile is not None:
+            from ..hetero import FleetTiming
+
+            self._timing = FleetTiming(self.profile, latency)
         # §V-B per-event wall-clock depends only on construction args — price
         # each event kind once instead of re-summing every step.  Fleets
         # with a time-varying TraceSchedule are instead priced per round by
@@ -338,6 +345,16 @@ class SyncScheduler:
         )
         # "full" routes through the legacy static-weight step: bit-identical
         self._sampling = self.plan is not None and not self.plan.is_full
+        from ..faults import resolve_faults
+
+        # empty schedules resolve to None: zero fault events and faults=None
+        # take the identical (pre-fault, bitwise unchanged) code path below
+        self.faults = resolve_faults(self.fleet.faults, cfg.topology, cfg.clusters)
+        if self.faults is not None and not self.store.resident:
+            raise ValueError(
+                "fault injection requires a resident client-state store; "
+                "host-offload runs cannot thread per-round fault operands"
+            )
         self._m = jnp.asarray(cfg.clusters.m(), jnp.float32)
         if self.store.resident:
             self.params = stacked_init(model, cfg.clusters.num_clients, seed)
@@ -360,6 +377,12 @@ class SyncScheduler:
         self.backend = resolve_backend(
             spec, agg_clusters, cfg.P(), cfg.alpha, mesh=self.mesh
         )
+        if self.faults is not None and self.backend.name == "collective":
+            # traced values can't be checked on device — validate the whole
+            # fault horizon host-side once (raises naming the bad round)
+            self.faults.mixing_stack(
+                0, self.faults.horizon() + 1, require_ring_stencil=True
+            )
         from .. import optim
         from .local_update import build_local_update
 
@@ -388,6 +411,19 @@ class SyncScheduler:
                     )
                 return params
 
+            def fused_faulted(params, batch, weights, p):
+                # p is consumed only by the inter transition (backends ignore
+                # it elsewhere); weights fold crashed clients/uplink drops
+                # into the same renormalized vector participation uses
+                params = local_sgd(params, batch)
+                if event != "local":
+                    params = self.backend.transition(
+                        params, event, weights=weights, p=p
+                    )
+                return params
+
+            if self.faults is not None:
+                return jax.jit(fused_faulted, donate_argnums=0)
             return jax.jit(fused_sampled if self._sampling else fused,
                            donate_argnums=0)
 
@@ -466,6 +502,41 @@ class SyncScheduler:
             )
         return times[event]
 
+    # -- fault plumbing ------------------------------------------------------
+    def _fault_round(self, r: int):
+        """(weights jnp, mask np, p jnp, uplink penalty, dt dict) of round
+        ``r`` under the fault schedule — one compilation per round.
+
+        The plan's mask (ones without sampling) is ANDed with the schedule's
+        surviving-client mask and renormalized, so a crashed client's weight
+        is exactly 0; a fully-crashed cluster falls back to its full ``m^``
+        column (the edge server cannot aggregate nothing — the transition
+        must stay column-stochastic).  ``p`` is the round's per-component
+        mixing matrix; the retry penalty prices the round's failed uplinks
+        once, at its inter event.
+        """
+        if self._fault_cache is None or self._fault_cache[0] != r:
+            from ..participation import renormalize_weights
+
+            clusters = self.cfg.clusters
+            base = (
+                self.plan.mask(r) if self._sampling
+                else np.ones(clusters.num_clients, dtype=bool)
+            )
+            mask = base & self.faults.client_mask(r)
+            weights = renormalize_weights(
+                clusters.m_hat(), clusters.assignments, mask
+            )
+            p = jnp.asarray(self.faults.mixing_at(r), jnp.float32)
+            penalty = (
+                0.0 if self._timing is None
+                else self._timing.uplink_retry_penalty(self.faults.uplink_failed(r))
+            )
+            self._fault_cache = (
+                r, jnp.asarray(weights, jnp.float32), mask, p, penalty, {}
+            )
+        return self._fault_cache[1:]
+
     # -- residency (host-offload stores) -------------------------------------
     def _residency_for_round(self, r: int):
         """Deterministic in ``r`` — prefetch and execution must agree."""
@@ -478,6 +549,16 @@ class SyncScheduler:
         event = self.cfg.event_at(k)
         if not self.store.resident:
             return self._apply_offload(k, event, staged_batch)
+        if self.faults is not None:
+            r = self._round_of(k)
+            weights, mask, p, penalty, times = self._fault_round(r)
+            self.params = self._step_fns[event](
+                self.params, staged_batch, weights, p
+            )
+            dt = self._masked_event_time(event, mask, times, r)
+            if event == "inter":
+                dt += penalty
+            return event, dt
         if self._sampling:
             weights, mask, times = self._round_participation(k)
             self.params = self._step_fns[event](self.params, staged_batch, weights)
@@ -622,10 +703,16 @@ class RoundScheduler:
         self._backend_spec = backend
         self.plan = None
         self.store = None
+        self.faults = None
         self._pipeline = None
         self._pipeline_src = None
         self._res_cache = None  # (step k, Residency) — prefetch must agree
         self._proto = fl.protocol()
+        self._timing = None
+        if self.profile is not None:
+            from ..hetero import FleetTiming
+
+            self._timing = FleetTiming(self.profile, latency)
         # §V-B wall-clock of one full round, priced once per event schedule;
         # trace-scheduled fleets reprice per round in _round_time_at instead
         self._schedule = None if self.profile is None else self.profile.schedule
@@ -668,6 +755,16 @@ class RoundScheduler:
             profile=self.profile, seed=seed,
         )
         self._sampling = self.plan is not None and not self.plan.is_full
+        from ..faults import resolve_faults
+
+        self.faults = resolve_faults(
+            self.fleet.faults, self._proto.topology, self._proto.clusters
+        )
+        if self.faults is not None and not self.store.resident:
+            raise ValueError(
+                "fault injection requires a resident client-state store; "
+                "host-offload runs cannot thread per-round fault operands"
+            )
         if self.store.resident:
             self.params = stacked_init(model, fl.num_clients, seed)
             self.opt_state = opt.init(self.params)
@@ -693,11 +790,19 @@ class RoundScheduler:
         self.backend = resolve_backend(
             spec, agg_clusters, self._proto.P(), fl.alpha, mesh=self.mesh
         )
+        if self.faults is not None and self.backend.name == "collective":
+            # traced values can't be checked on device — validate the whole
+            # fault horizon host-side once (raises naming the bad round)
+            self.faults.mixing_stack(
+                0, self.faults.horizon() + 1, require_ring_stencil=True
+            )
         self._round_step = jax.jit(
             build_fl_round_step(model, opt, engine_fl, backend=self.backend,
                                 rounds_per_step=self.rounds_per_step,
                                 participation=(self._sampling
-                                               or not self.store.resident)),
+                                               or not self.store.resident
+                                               or self.faults is not None),
+                                mixing=self.faults is not None),
             donate_argnums=(0, 1),
         )
 
@@ -829,10 +934,70 @@ class RoundScheduler:
             losses=losses,
         )
 
+    # -- fault plumbing ------------------------------------------------------
+    def _fault_operands(self, r0: int):
+        """Stacked ``(R, C)`` weights, per-round masks and the ``(R, D, D)``
+        mixing stack for the superstep starting at round ``r0``.
+
+        Per round: the plan's mask (ones without sampling) ANDed with the
+        schedule's surviving clients, renormalized — crashed clients weigh
+        exactly 0, fully-crashed clusters fall back to their full ``m^``
+        column.  Both stacks are traced operands of one compiled superstep,
+        so the fault trace never recompiles.
+        """
+        from ..participation import renormalize_weights
+
+        clusters = self._proto.clusters
+        c = clusters.num_clients
+        weights, masks = [], []
+        for i in range(self.rounds_per_step):
+            r = r0 + i
+            base = (
+                self.plan.mask(r) if self._sampling
+                else np.ones(c, dtype=bool)
+            )
+            mask = base & self.faults.client_mask(r)
+            weights.append(
+                renormalize_weights(clusters.m_hat(), clusters.assignments, mask)
+            )
+            masks.append(mask)
+        mixing = self.faults.mixing_stack(r0, self.rounds_per_step)
+        return np.stack(weights), masks, mixing
+
+    def _fault_step(self, k: int, stacked) -> StepEvent:
+        r0 = (k - 1) * self.rounds_per_step
+        w_np, masks, mixing = self._fault_operands(r0)
+        self.params, self.opt_state, losses = self._round_step(
+            self.params, self.opt_state, stacked,
+            jnp.asarray(w_np, jnp.float32), jnp.asarray(mixing, jnp.float32),
+        )
+        if self.profile is None:
+            dt = self.rounds_per_step * self._round_time
+        else:
+            dt = sum(
+                self._mask_round_time(
+                    masks[i], t=(r0 + i) if self._schedule is not None else None
+                )
+                for i in range(self.rounds_per_step)
+            )
+        if self._timing is not None:
+            dt += sum(
+                self._timing.uplink_retry_penalty(self.faults.uplink_failed(r0 + i))
+                for i in range(self.rounds_per_step)
+            )
+        return StepEvent(
+            kind="round",
+            iteration=k * self.iterations_per_step,
+            dt=dt,
+            losses=losses,
+        )
+
     def step(self, k: int, batch_source) -> StepEvent:
         if not self.store.resident:
             return self._offload_step(k, batch_source)
         stacked = self._superstep_batches(k, batch_source)
+        if self.faults is not None:
+            return self._fault_step(k, stacked)
         if self._sampling:
             # rounds (k-1)*R .. k*R-1, one weight vector per scanned round —
             # a traced (R, C) operand, so redraws never recompile
@@ -931,6 +1096,7 @@ class AsyncScheduler:
         )
         self.plan = None
         self.store = None
+        self.faults = None
         self._prefetched = None
 
     def bind(self, model, seed: int) -> None:
@@ -1000,6 +1166,16 @@ class AsyncScheduler:
             seed=seed,
         )
         self._sampling = self.plan is not None and not self.plan.is_full
+        from ..faults import resolve_faults
+
+        # the async fault axis is indexed by the global iteration count t —
+        # the same granularity the eq. 21-22 gaps are measured in
+        self.faults = resolve_faults(self.fleet.faults, cfg.topology, cfg.clusters)
+        self._timing = None
+        if cfg.profile is not None:
+            from ..hetero import FleetTiming
+
+            self._timing = FleetTiming(cfg.profile, cfg.alpha_latency)
         self._client_idx = [
             np.asarray(cfg.clusters.clients_of(j)) for j in range(d)
         ]
@@ -1065,11 +1241,21 @@ class AsyncScheduler:
         the fired cluster's ``m^`` sub-vector is masked to the participants
         and renormalized, so non-participants carry weight exactly 0 in the
         eq. 20 update.  All-masked clusters report ``participated=False``.
+
+        Under a fault schedule the mask additionally drops crashed clients
+        and this iteration's uplink failures (round axis = the global
+        iteration count ``t``).
         """
-        mask = self.plan.mask(k - 1)[self._client_idx[d]]
+        idx = self._client_idx[d]
+        mask = (
+            self.plan.mask(k - 1)[idx] if self._sampling
+            else np.ones(len(idx), dtype=bool)
+        )
+        if self.faults is not None:
+            mask = mask & self.faults.client_mask(self.t)[idx]
         if not mask.any():
             return None, False
-        w = np.where(mask, self._m_hat_np[self._client_idx[d]], 0.0)
+        w = np.where(mask, self._m_hat_np[idx], 0.0)
         return jnp.asarray(w / w.sum(), jnp.float32), True
 
     def step(self, k: int, batch_source) -> StepEvent:
@@ -1088,19 +1274,37 @@ class AsyncScheduler:
             batches = self._gather(batch_source, d)
         self._prefetched = None
 
+        # A dead edge server fires nothing: its cluster idles (kind "outage",
+        # no update, no mixing, t unchanged) and re-enters via the staleness
+        # mixing once it is back — the gap keeps growing through the outage,
+        # so psi discounts the stale model exactly as eq. 22 prescribes.
+        r_fault = self.t  # the fault round this event runs in (pre-increment)
+        outage = (
+            self.faults is not None
+            and not bool(self.faults.server_alive(r_fault)[d])
+        )
         m_hat, participated = (
-            self._event_weights(k, d) if self._sampling
+            self._event_weights(k, d)
+            if (self._sampling or self.faults is not None)
             else (self._m_hats[d], True)
         )
+        if outage:
+            participated = False
         if participated:
             self.y = self._cluster_update(
                 self.y, d, batches, self._thetas[d], m_hat
             )
 
-            # staleness-aware inter-cluster mixing (eq. 21-22) via the backend
+            # staleness-aware inter-cluster mixing (eq. 21-22) via the
+            # backend, over the round's *surviving* edge set under faults —
+            # a downed link drops its neighbor from the blend
             gaps = (self.t - self.last_update).astype(np.float64)
             gaps[d] = 0.0
-            p_t = staleness_mixing_matrix(cfg.topology, d, gaps, cfg.psi)
+            graph = (
+                cfg.topology if self.faults is None
+                else self.faults.adjacency_at(r_fault)
+            )
+            p_t = staleness_mixing_matrix(graph, d, gaps, cfg.psi)
             self.y = self.backend.inter_cluster(
                 self.y, jnp.asarray(p_t, jnp.float32), 1
             )
@@ -1112,10 +1316,16 @@ class AsyncScheduler:
                 # persistent cluster stack in lockstep with the live y
                 self.store.scatter(self._store_res, self.y)
         # Next firing: service time, stretched by dropout retries when the
-        # profile says some of the cluster's devices are flaky.
+        # profile says some of the cluster's devices are flaky, plus the
+        # capped-backoff retries of this iteration's failed uplinks.
         service = self.iter_times[d]
         if self._dropout is not None:
             service *= self._dropout.attempts(d)
+        if self.faults is not None and self._timing is not None and not outage:
+            idx = self._client_idx[d]
+            failed = np.zeros(cfg.clusters.num_clients, dtype=bool)
+            failed[idx] = self.faults.uplink_failed(r_fault)[idx]
+            service += self._timing.uplink_retry_penalty(failed)
         heapq.heappush(self._queue, (self.clock + service, d))
         if self.prefetch:
             # the queue top IS the next event — gather its batches now, while
@@ -1123,7 +1333,8 @@ class AsyncScheduler:
             nxt = self._queue[0][1]
             self._prefetched = (batch_source, nxt, self._gather(batch_source, nxt))
         return StepEvent(
-            kind="cluster" if participated else "skipped",
+            kind=("outage" if outage
+                  else "cluster" if participated else "skipped"),
             iteration=self.t, dt=self.clock - prev_clock, cluster=d,
         )
 
@@ -1292,6 +1503,7 @@ def _as_fleet(s: dict) -> FleetSpec:
         profile_seed=s.pop("profile_seed", None),
         participation=s.pop("participation", None),
         store=s.pop("store", None),
+        faults=s.pop("faults", None),
     )
 
 

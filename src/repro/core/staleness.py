@@ -42,7 +42,7 @@ def psi_exponential(rate: float = 0.5) -> Callable:
 
 
 def staleness_mixing_matrix(
-    topo: Topology,
+    topo: Topology | np.ndarray,
     trigger: int,
     gaps: Sequence[float],
     psi: Callable = psi_inverse,
@@ -50,7 +50,11 @@ def staleness_mixing_matrix(
     """Build the eq-(22) mixing matrix P_t for a single triggering cluster.
 
     Args:
-      topo: edge-server graph.
+      topo: edge-server graph — a ``Topology``, or a raw symmetric (D, D)
+        adjacency array.  The array form exists for the fault-injection
+        degradation path, whose surviving graphs may be *disconnected*
+        (``Topology`` rejects those); the trigger then blends only with the
+        neighbors it can still reach.
       trigger: index ``d`` of the cluster that finished its iteration.
       gaps: iteration gaps ``delta_t^(i)`` for every cluster (the trigger's own
         gap is 0 by definition).
@@ -60,11 +64,16 @@ def staleness_mixing_matrix(
       P_t (D x D) with column convention P_t[j, d] = weight of cluster j's
       model in cluster d's new model (matches ``Y @ P_t`` on stacked models).
     """
-    d_count = topo.num_servers
+    if isinstance(topo, Topology):
+        d_count = topo.num_servers
+        nbrs = list(topo.neighbors(trigger))
+    else:
+        adj = np.asarray(topo)
+        d_count = adj.shape[0]
+        nbrs = [int(v) for v in np.nonzero(adj[trigger])[0]]
     gaps = np.asarray(gaps, dtype=np.float64)
     if gaps.shape != (d_count,):
         raise ValueError("one gap per cluster required")
-    nbrs = list(topo.neighbors(trigger))
     closed = nbrs + [trigger]
     w = {i: float(psi(gaps[i])) for i in closed}
     big_psi = sum(w.values())

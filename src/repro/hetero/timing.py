@@ -164,6 +164,30 @@ class FleetTiming:
             t += alpha * self.latency.t_comm_server_server()
         return t
 
+    # -- fault-injection pricing ---------------------------------------------
+    def uplink_retry_penalty(self, failed, t: Optional[int] = None) -> float:
+        """Extra wall-clock charged when the round's uplinks fail.
+
+        ``failed`` is a boolean (C,) mask of clients whose upload was dropped
+        this round (``FaultSchedule.uplink_failed``).  The edge server
+        re-requests each failed upload with the same capped-backoff it uses
+        for flaky devices: ``MAX_ATTEMPTS - 1`` retries over the client's
+        uplink before it gives up and aggregates without them (the first
+        attempt is already priced by :meth:`sync_event_time`).  The round
+        waits for the slowest retried link, so the penalty is priced by the
+        narrowest failed uplink.  ``t`` is unused today (bandwidths are not
+        trace-scheduled) but keeps the signature round-indexed like the rest
+        of the pricing surface.
+        """
+        del t
+        if self.latency is None:
+            return 0.0
+        mask = np.asarray(failed, dtype=bool)
+        if not mask.any():
+            return 0.0
+        bw_min = float(self.profile.bandwidths[mask].min())
+        return (MAX_ATTEMPTS - 1) * self.latency.t_comm_client_server(bw_min)
+
     # -- asynchronous per-cluster service times ------------------------------
     def cluster_service_times(
         self, clusters: ClusterSpec, min_batches: int

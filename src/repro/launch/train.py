@@ -47,6 +47,9 @@ def run_scenario(args) -> None:
     store = _store_spec(args)
     if store is not None:
         overrides["store"] = store
+    faults = _fault_spec(args)
+    if faults is not None:
+        overrides["faults"] = faults
     # every explicitly-set flag overrides the registered config (None = unset)
     for flag, key in (("clients", "num_clients"), ("clusters", "num_clusters"),
                       ("samples", "num_samples"), ("tau1", "tau1"),
@@ -77,6 +80,22 @@ def _participation_spec(args):
     if args.participation == "uniform-k":
         return {"strategy": "uniform-k", "k": args.participation_k}
     return args.participation
+
+
+def _fault_spec(args):
+    """Turn ``--faults <spec>`` into a ``repro.faults`` spec.
+
+    Accepts inline JSON (an event list or ``{"events": [...], "psi": ...}``)
+    or ``@path/to/trace.json``; validation happens in ``RunConfig.validate``
+    / ``FaultSchedule``, which report the malformed event by index.
+    """
+    if args.faults is None:
+        return None
+    spec = args.faults
+    if spec.startswith("@"):
+        with open(spec[1:]) as f:
+            spec = f.read()
+    return spec
 
 
 def _store_spec(args):
@@ -138,6 +157,11 @@ def main(argv=None):
     ap.add_argument("--k-max", dest="k_max", type=int, default=None,
                     help="resident client-model slots for --store "
                          "host-offload (default: one per cluster)")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec (repro.faults): inline JSON "
+                         "event list / {'events': ...} dict, or @file.json; "
+                         "events compile into traced per-round mixing "
+                         "matrices and client masks — no recompiles")
     ap.add_argument("--batch", type=int, default=None, help="default 4 (LM path)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
@@ -162,7 +186,8 @@ def main(argv=None):
     rc = RunConfig(
         model=ModelSpec(kind="causal-lm", instance=model),
         fleet=FleetSpec(participation=_participation_spec(args),
-                        store=_store_spec(args)),
+                        store=_store_spec(args),
+                        faults=_fault_spec(args)),
         exec=ExecSpec(
             scheduler="round",
             backend=args.backend,

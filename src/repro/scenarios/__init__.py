@@ -54,6 +54,7 @@ class Scenario:
     profile: Union[str, dict, None] = None   # repro.hetero sampler spec
     participation: Union[str, dict, None] = None  # repro.participation spec
     store: Union[str, dict, None] = None     # repro.state client-state store
+    faults: Union[dict, list, None] = None   # repro.faults event list / spec
     num_clients: int = 20
     num_clusters: int = 4
     tau1: int = 5
@@ -226,6 +227,8 @@ class Scenario:
                 # client count instead of failing k_max > N validation
                 store = dict(store, k_max=min(int(store["k_max"]), c))
             cfg["store"] = store
+        if self.faults is not None:
+            cfg["faults"] = self.faults
         cfg.update(overrides)
         # the fleet sampler follows the run seed whether the profile came
         # from the template or an override (unless explicitly pinned)
@@ -401,6 +404,26 @@ register_scenario(Scenario(
     participation={"strategy": "uniform-k", "k": 4},
     store={"kind": "host-offload", "k_max": 32},
     batch_size=4,
+))
+
+register_scenario(Scenario(
+    name="chaos-ring",
+    description="Fault-injection lane: compiled round supersteps on a ring of "
+                "4 edge servers that degrades to a line (link 0-3 down), "
+                "loses server 2 outright (local-only rounds, staleness "
+                "re-entry on rejoin), and sees client crashes and uplink "
+                "drops — all as traced per-round mixing/weight operands, "
+                "zero recompiles.",
+    scheduler="round", partition="iid", tau1=2, tau2=1, alpha=1,
+    num_clients=8, num_clusters=4, rounds_per_step=2,
+    profile={"kind": "uniform", "heterogeneity": 2.0},
+    faults={"events": [
+        {"kind": "link-down", "round": 2, "link": [0, 3], "until": 6},
+        {"kind": "server-down", "round": 4, "server": 2, "until": 8},
+        {"kind": "client-crash", "round": 3, "client": 5, "until": 7},
+        {"kind": "uplink-drop", "round": 5, "client": 1},
+        {"kind": "uplink-drop", "round": 9, "client": 6},
+    ]},
 ))
 
 register_scenario(Scenario(

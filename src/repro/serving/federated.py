@@ -77,6 +77,7 @@ class FederatedServer(BatchServer):
         self._active = 0
         self._pending = False
         self.swaps = 0
+        self.rejected = 0
 
         def fed_prefill(stacked, d, batch):
             p = jax.tree.map(lambda w: w[d], stacked)
@@ -103,6 +104,11 @@ class FederatedServer(BatchServer):
         The copy/transfer happens now (overlapping any in-flight decode
         dispatches); only the slot flip waits for the batch boundary, so a
         running batch keeps bit-stable weights end to end.
+
+        A stack carrying non-finite leaves is rejected with ``ValueError``
+        before it touches the inactive slot — a training source that died
+        mid-round (fault injection, NaN blow-up) can never displace the
+        last-good serving weights.
         """
         stack = _copy_tree(cluster_params)
         d = int(jax.tree.leaves(stack)[0].shape[0])
@@ -110,15 +116,34 @@ class FederatedServer(BatchServer):
             raise ValueError(
                 f"published stack has {d} clusters, server has {self.num_clusters}"
             )
+        for path, leaf in jax.tree_util.tree_leaves_with_path(stack):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                raise ValueError(
+                    f"published stack has non-finite values at "
+                    f"{jax.tree_util.keystr(path)}; keeping last-good weights"
+                )
         self._slots[1 - self._active] = stack
         self._pending = True
 
-    def sync_from(self, runtime=None) -> None:
-        """Publish the attached (or given) runtime's current cluster models."""
+    def sync_from(self, runtime=None) -> bool:
+        """Publish the attached (or given) runtime's current cluster models.
+
+        Returns ``True`` on success.  If the source dies mid-swap — raises
+        while materializing its stack, or hands over a non-finite/misshapen
+        one — the staged slot is left untouched, the server keeps serving
+        its last-good double-buffered weights, ``rejected`` is incremented,
+        and ``False`` is returned.  A missing runtime is still a
+        ``ValueError``: that is a wiring bug, not a fault.
+        """
         rt = runtime or self._runtime
         if rt is None:
             raise ValueError("no runtime attached; pass one or construct with runtime=")
-        self.publish(rt.cluster_params())
+        try:
+            self.publish(rt.cluster_params())
+        except Exception:
+            self.rejected += 1
+            return False
+        return True
 
     def _begin_batch(self, batch) -> None:
         if self._pending:

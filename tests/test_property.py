@@ -329,3 +329,61 @@ def test_participation_masks_deterministic_and_in_bounds(data):
     am = ap.mask(r)
     np.testing.assert_array_equal(am, ap.mask(r))
     assert np.all(~am[avail == 0.0])        # dead clients never participate
+
+
+# ---------------------------------------------------------------------------
+# Fleet pricing: the capped-retry floor must hold per traced round
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_capped_retry_floor_under_trace_rows(data):
+    """Dead devices price at the retry cap, never at infinity.
+
+    For any fleet and any ``TraceSchedule`` row — including rows that zero a
+    device's availability outright — ``ClusterDropout.attempts`` returns
+    exactly ``MAX_ATTEMPTS`` for a dead cluster, and the per-round effective
+    speeds keep the ``1 / MAX_ATTEMPTS`` floor: a round's pacing never drops
+    below ``speeds_at(t) / MAX_ATTEMPTS`` and never exceeds the row's raw
+    speeds (availability only ever discounts)."""
+    from repro.core.protocol import ClusterSpec
+    from repro.hetero import DeviceProfile, TraceSchedule
+    from repro.hetero.timing import MAX_ATTEMPTS, ClusterDropout, FleetTiming
+
+    n = data.draw(st.integers(2, 10))
+    steps = data.draw(st.integers(1, 6))
+    speeds = 1.0 + np.array(
+        data.draw(st.lists(st.floats(0.0, 4.0), min_size=n, max_size=n)))
+    speeds[data.draw(st.integers(0, n - 1))] = 1.0   # slowest = reference
+    trace_speeds = 1.0 + np.array(data.draw(st.lists(
+        st.floats(0.0, 4.0), min_size=steps * n, max_size=steps * n))
+    ).reshape(steps, n)
+    trace_avail = np.array(data.draw(st.lists(
+        st.floats(0.0, 1.0), min_size=steps * n, max_size=steps * n))
+    ).reshape(steps, n)
+    # at least one device is fully dead on at least one row
+    dead_t = data.draw(st.integers(0, steps - 1))
+    dead_i = data.draw(st.integers(0, n - 1))
+    trace_avail[dead_t, dead_i] = 0.0
+    profile = DeviceProfile(
+        speeds=speeds, bandwidths=np.ones(n), availability=trace_avail[0],
+        schedule=TraceSchedule(trace_speeds, trace_avail),
+    )
+    timing = FleetTiming(profile)
+    t = data.draw(st.integers(0, 3 * steps))
+    eff = timing._effective_speeds(t)
+    row_speeds = trace_speeds[t % steps]
+    assert np.all(eff >= row_speeds / MAX_ATTEMPTS - 1e-12)
+    assert np.all(eff <= row_speeds + 1e-12)
+    # the dead row prices the dead device at exactly the floor
+    eff_dead = timing._effective_speeds(dead_t)
+    assert eff_dead[dead_i] == pytest.approx(
+        trace_speeds[dead_t, dead_i] / MAX_ATTEMPTS)
+    # and the dropout process charges a dead cluster the cap, not forever
+    spec = ClusterSpec.uniform(n, 1)
+    static = DeviceProfile(
+        speeds=speeds, bandwidths=np.ones(n), availability=trace_avail[dead_t],
+    )
+    drop = FleetTiming(static).dropout_process(spec, seed=0)
+    assert drop.attempts(0) == MAX_ATTEMPTS
+    assert isinstance(drop, ClusterDropout)

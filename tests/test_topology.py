@@ -67,3 +67,29 @@ def test_disconnected_raises():
     a[2, 3] = a[3, 2] = 1
     with pytest.raises(ValueError):
         T.Topology("two_islands", 4, a)
+
+
+def test_from_edges_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        T.from_edges(3, [(0, 1), (1, 3), (0, 2)])
+    with pytest.raises(ValueError, match="self-loop"):
+        T.from_edges(3, [(0, 1), (1, 1), (1, 2)])
+    with pytest.raises(ValueError, match="duplicate"):
+        T.from_edges(3, [(0, 1), (1, 2), (2, 1), (0, 2)])
+    topo = T.from_edges(4, [(0, 1), (1, 2), (2, 3), (3, 0)])
+    assert np.array_equal(topo.adjacency, T.ring(4).adjacency)
+
+
+def test_connected_components():
+    # a connected Topology has exactly one component covering every server
+    comps = T.ring(5).connected_components()
+    assert len(comps) == 1
+    np.testing.assert_array_equal(comps[0], np.arange(5))
+    # the module-level function handles the disconnected adjacencies the
+    # fault-degradation path produces (which Topology itself rejects)
+    a = np.zeros((6, 6), dtype=np.int64)
+    a[0, 1] = a[1, 0] = 1           # {0, 1}
+    a[2, 3] = a[3, 2] = 1           # {2, 3, 4} via 3-4
+    a[3, 4] = a[4, 3] = 1
+    comps = T.connected_components(a)  # server 5 is a singleton
+    assert [c.tolist() for c in comps] == [[0, 1], [2, 3, 4], [5]]
