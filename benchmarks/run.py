@@ -21,7 +21,8 @@ def main() -> None:
     from . import (
         agg_backends, beyond_paper, cifar_task, fault_tolerance, figures,
         kernels_bench, lm_throughput, moe_ablation, participation,
-        roofline_report, serving_federated, straggler_wallclock, throughput,
+        roofline_report, serving_continuous, serving_federated,
+        straggler_wallclock, throughput,
     )
 
     registry = {
@@ -40,6 +41,7 @@ def main() -> None:
         "throughput": throughput.main,
         "lm_throughput": lm_throughput.main,
         "serving_federated": serving_federated.main,
+        "serving_continuous": serving_continuous.main,
         "fault_tolerance": fault_tolerance.main,
         "roofline": roofline_report.main,
         "beyond_torus": beyond_paper.main,

@@ -19,6 +19,7 @@ from repro.sharding.rules import MeshAxes
 __all__ = [
     "make_production_mesh", "make_test_mesh", "mesh_axes_for",
     "make_client_mesh", "resolve_client_mesh",
+    "make_cluster_mesh", "resolve_cluster_mesh",
 ]
 
 
@@ -85,6 +86,26 @@ def resolve_client_mesh(spec, num_clients: int, axis_name: str = "data"):
             return make_client_mesh(num_clients, axis_name)
         return None
     raise ValueError(f"mesh must be None, 'auto', or a jax Mesh, got {spec!r}")
+
+
+def make_cluster_mesh(num_clusters: int, axis_name: str = "cluster") -> jax.sharding.Mesh:
+    """1-D mesh spanning the cluster-replica axis (one replica per device).
+
+    This is the serving-side twin of :func:`make_client_mesh`: the
+    ``ContinuousFederatedServer`` shards its stacked ``(D, ...)`` replica
+    tree one cluster per ``axis_name`` index, so training and serving share
+    one mesh layout.
+    """
+    return make_client_mesh(num_clusters, axis_name)
+
+
+def resolve_cluster_mesh(spec, num_clusters: int, axis_name: str = "cluster"):
+    """Resolve a serving ``mesh`` field: None / "auto" / a validated Mesh.
+
+    Same contract as :func:`resolve_client_mesh`, with the axis spanning
+    cluster replicas instead of clients.
+    """
+    return resolve_client_mesh(spec, num_clusters, axis_name)
 
 
 def mesh_axes_for(mesh: jax.sharding.Mesh) -> MeshAxes:

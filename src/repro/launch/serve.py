@@ -85,31 +85,49 @@ def generate(model: CausalLM, params, prompts: jax.Array, gen_len: int,
 
 def serve_scenario(name: str, *, train_steps: int = 4, requests: int = 16,
                    max_batch: int = 8, gen: int = 16, seed: int = 0,
-                   arch_overrides=None, length_buckets=(16, 32, 64)):
+                   arch_overrides=None, length_buckets=(16, 32, 64),
+                   continuous: bool = False, mesh=None):
     """Close the training->serving loop for one named federated scenario.
 
     Builds the scenario (it must use the ``lm-clustered`` corpus so the
     trace knows each cluster's successor table), trains it for
     ``train_steps`` scheduler steps, pulls the per-cluster models off the
-    live runtime via ``cluster_params()`` into a
-    :class:`~repro.serving.FederatedServer`, and replays a Zipf per-cluster
-    request trace against them.  Returns ``(server, done, history)``.
+    live runtime via ``cluster_params()`` into a federated server, and
+    replays a Zipf per-cluster request trace against them.  Returns
+    ``(server, done, history)``.
+
+    ``continuous=True`` serves through the slot-pool
+    :class:`~repro.serving.ContinuousFederatedServer` (mid-decode admission,
+    device-side decode loop) with heavy-tailed per-request budgets on
+    ``[1, gen]``; ``mesh`` (None / ``"auto"`` / a Mesh) then shards the
+    stacked replica axis across the cluster mesh.
     """
     from repro.scenarios import build_scenario
-    from repro.serving import FederatedServer, synthetic_trace
+    from repro.serving import (
+        ContinuousFederatedServer, FederatedServer, synthetic_trace,
+    )
 
     overrides = {"seed": seed}
     if arch_overrides:
         overrides["arch_overrides"] = arch_overrides
     run = build_scenario(name, **overrides)
     history = run.run(train_steps)
-    server = FederatedServer(
-        run.runtime.model, runtime=run.runtime,
-        max_batch=max_batch, length_buckets=tuple(length_buckets),
-    )
+    if continuous:
+        server = ContinuousFederatedServer(
+            run.runtime.model, runtime=run.runtime, mesh=mesh,
+            max_batch=max_batch, length_buckets=tuple(length_buckets),
+            gen_cap=gen,
+        )
+        budgets = (1, gen)
+    else:
+        server = FederatedServer(
+            run.runtime.model, runtime=run.runtime,
+            max_batch=max_batch, length_buckets=tuple(length_buckets),
+        )
+        budgets = gen
     trace = synthetic_trace(
         run.dataset, num_requests=requests, prompt_lens=(8, 16),
-        max_new_tokens=gen, seed=seed,
+        max_new_tokens=budgets, seed=seed,
     )
     for req in trace:
         server.submit(req)
@@ -131,19 +149,30 @@ def main(argv=None):
     ap.add_argument("--train-steps", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous slot-pool engine "
+                         "(mid-decode admission, device-side decode loop)")
+    ap.add_argument("--mesh", default=None,
+                    help="'auto' to shard the cluster-replica stack across "
+                         "a cluster mesh when enough devices exist")
     args = ap.parse_args(argv)
 
     if args.scenario is not None:
         server, done, _ = serve_scenario(
             args.scenario, train_steps=args.train_steps,
             requests=args.requests, max_batch=args.max_batch, gen=args.gen,
+            continuous=args.continuous, mesh=args.mesh,
         )
         s = server.stats
-        print(f"scenario={args.scenario} clusters={server.num_clusters} "
-              f"requests={s.requests} batches={s.batches}")
+        engine = "continuous" if args.continuous else "static"
+        print(f"scenario={args.scenario} engine={engine} "
+              f"clusters={server.num_clusters} requests={s.requests} "
+              f"batches={s.batches}")
         print(f"{s.tokens_generated} tokens in {s.wall_s:.2f}s -> "
               f"{s.tokens_per_s:.1f} tok/s, {s.requests_per_s:.2f} req/s "
-              f"(mean decode steps {s.mean_decode_steps:.1f})")
+              f"(mean occupancy {s.mean_occupancy:.2f})")
+        print(f"latency p50/p95 {s.latency_p50:.3f}/{s.latency_p95:.3f}s, "
+              f"ttft p50/p95 {s.ttft_p50:.3f}/{s.ttft_p95:.3f}s")
         return
 
     cfg = get_config(args.arch)

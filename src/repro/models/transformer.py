@@ -387,10 +387,14 @@ class CausalLM:
         x = rms_norm(x, params["ln_final"], cfg.norm_eps)
         return self.logits(params, x[:, -1:, :]), caches
 
-    def decode_step(self, params, token, cache, pos):
-        """token: (B,) or (B,K); pos: scalar int32 (current position).
+    def decode_hidden(self, params, token, cache, pos):
+        """``decode_step`` up to (and including) the final norm.
 
-        Returns (logits (B,1,V...) , new_cache)."""
+        Returns (x (B,1,d), new_cache).  Split out so callers that need the
+        pre-logits hidden state — e.g. the continuous-batching engine, which
+        computes logits outside a per-slot vmap to keep per-slot gathered
+        cluster weights bitwise-identical to the shared path — can reuse the
+        exact decode body."""
         cfg = self.cfg
         tok = token[..., None] if token.ndim == 1 else token[..., None]  # add S=1
         if cfg.modality == "audio" and cfg.num_codebooks > 1:
@@ -415,4 +419,11 @@ class CausalLM:
 
         x, new_cache = jax.lax.scan(block_fn, x, (params["blocks"], cache))
         x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+        return x, new_cache
+
+    def decode_step(self, params, token, cache, pos):
+        """token: (B,) or (B,K); pos: scalar int32 (current position).
+
+        Returns (logits (B,1,V...) , new_cache)."""
+        x, new_cache = self.decode_hidden(params, token, cache, pos)
         return self.logits(params, x), new_cache

@@ -384,6 +384,21 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="lm-serving-continuous",
+    description="Continuous-batching serving lane: the clustered conflicting "
+                "corpora of federated-lm-serving, served through the slot-pool "
+                "engine (mid-decode admission, device-side decode chunks, "
+                "heavy-tailed per-request budgets) via "
+                "repro.serving.ContinuousFederatedServer; --mesh auto shards "
+                "the stacked cluster replicas across the serving mesh.",
+    scheduler="round", dataset="lm-clustered",
+    num_clients=8, num_clusters=4, tau1=8, tau2=2, alpha=1,
+    rounds_per_step=1, learning_rate=0.3,
+    arch="granite-8b", batch_size=8, num_samples=256,
+    seq_len=32, vocab_size=32,
+))
+
+register_scenario(Scenario(
     name="sampled-k-ring",
     description="FedAvg-style partial participation: 2 of each cluster's 5 "
                 "clients sampled per round (uniform-k), label-skew ring.",

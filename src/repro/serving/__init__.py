@@ -1,8 +1,9 @@
-from .engine import Request, BatchServer, ServeStats
-from .federated import FederatedServer
+from .engine import Request, BatchServer, ContinuousServer, ServeStats
+from .federated import ContinuousFederatedServer, FederatedServer, ReplicaBuffer
 from .traffic import synthetic_trace, zipf_cluster_ids
 
 __all__ = [
-    "Request", "BatchServer", "ServeStats",
-    "FederatedServer", "synthetic_trace", "zipf_cluster_ids",
+    "Request", "BatchServer", "ContinuousServer", "ServeStats",
+    "FederatedServer", "ContinuousFederatedServer", "ReplicaBuffer",
+    "synthetic_trace", "zipf_cluster_ids",
 ]

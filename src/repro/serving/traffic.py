@@ -26,7 +26,7 @@ import numpy as np
 
 from .engine import Request
 
-__all__ = ["zipf_cluster_ids", "synthetic_trace"]
+__all__ = ["zipf_cluster_ids", "heavy_tail_ints", "synthetic_trace"]
 
 
 def zipf_cluster_ids(
@@ -46,14 +46,33 @@ def zipf_cluster_ids(
     return ranked[rng.choice(num_clusters, size=num_requests, p=weights)]
 
 
+def heavy_tail_ints(
+    rng: np.random.Generator, lo: int, hi: int, size: int, *, exponent: float = 1.1
+) -> np.ndarray:
+    """Power-law integers on [lo, hi]: P(k) ∝ k^-exponent.
+
+    The decode-budget analogue of the Zipf cluster mix — most requests want
+    a few tokens, a heavy tail wants many.  This is the regime where static
+    batch drain pays ``max(budget)`` straggler steps per batch and
+    continuous admission reclaims the idle slots.
+    """
+    if not 1 <= lo <= hi:
+        raise ValueError(f"need 1 <= lo <= hi, got [{lo}, {hi}]")
+    ks = np.arange(lo, hi + 1, dtype=np.float64)
+    p = ks ** -float(exponent)
+    p /= p.sum()
+    return rng.choice(np.arange(lo, hi + 1), size=size, p=p)
+
+
 def synthetic_trace(
     dataset,
     *,
     num_requests: int,
     prompt_lens: Sequence[int] = (8, 16),
-    max_new_tokens: int = 16,
+    max_new_tokens=16,
     eos_horizon: int = 2,
     exponent: float = 1.1,
+    gen_exponent: float = 1.1,
     seed: int = 0,
 ) -> list[Request]:
     """Replayable per-cluster request trace from a clustered LM corpus.
@@ -63,6 +82,11 @@ def synthetic_trace(
     ``cluster_assignments``).  Prompts are sequence prefixes from the
     request's cluster; ``eos_id`` is the chain's token ``eos_horizon``
     steps past the prompt.
+
+    ``max_new_tokens`` is either one int (every request gets that budget)
+    or a ``(lo, hi)`` pair: per-request budgets drawn heavy-tailed from
+    ``[lo, hi]`` with :func:`heavy_tail_ints` (``gen_exponent``), still
+    deterministic in ``seed``.
     """
     succ = getattr(dataset, "cluster_succ", None)
     assign = getattr(dataset, "cluster_assignments", None)
@@ -82,6 +106,11 @@ def synthetic_trace(
         raise ValueError(
             f"prompt_lens {tuple(prompt_lens)} exceed the corpus seq_len {seq_len}"
         )
+    if isinstance(max_new_tokens, (tuple, list)):
+        lo, hi = map(int, max_new_tokens)
+        budgets = heavy_tail_ints(rng, lo, hi, num_requests, exponent=gen_exponent)
+    else:
+        budgets = np.full(num_requests, int(max_new_tokens))
     reqs = []
     for uid, d in enumerate(ids.tolist()):
         members = np.flatnonzero(assign == d)
@@ -93,7 +122,7 @@ def synthetic_trace(
         for _ in range(eos_horizon):
             eos = int(succ[d, eos])
         reqs.append(Request(
-            uid=uid, prompt=prompt, max_new_tokens=max_new_tokens,
+            uid=uid, prompt=prompt, max_new_tokens=int(budgets[uid]),
             eos_id=eos, cluster_id=int(d),
         ))
     return reqs

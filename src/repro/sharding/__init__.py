@@ -1,9 +1,12 @@
-from .rules import MeshAxes, param_pspecs, batch_pspecs, cache_pspecs, describe_sharding
+from .rules import (
+    MeshAxes, param_pspecs, batch_pspecs, cache_pspecs, replica_pspecs,
+    describe_sharding,
+)
 from .decode import make_decode_impl
 from .context import activation_sharding, constrain_batch
 
 __all__ = [
     "MeshAxes", "param_pspecs", "batch_pspecs", "cache_pspecs",
-    "describe_sharding", "make_decode_impl",
+    "replica_pspecs", "describe_sharding", "make_decode_impl",
     "activation_sharding", "constrain_batch",
 ]

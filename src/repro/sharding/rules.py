@@ -36,7 +36,8 @@ from repro.models.config import ArchConfig
 
 PyTree = Any
 
-__all__ = ["MeshAxes", "param_pspecs", "batch_pspecs", "cache_pspecs", "describe_sharding"]
+__all__ = ["MeshAxes", "param_pspecs", "batch_pspecs", "cache_pspecs",
+           "replica_pspecs", "describe_sharding"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +138,23 @@ def param_pspecs(cfg: ArchConfig, params_shape: PyTree, ax: MeshAxes,
         return P(*prefix, *core)
 
     return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def replica_pspecs(stack: PyTree, axis: str) -> PyTree:
+    """Specs sharding a stacked ``(D, ...)`` replica tree on its leading axis.
+
+    Used by the serving path: per-cluster model replicas live one per
+    ``axis`` index (the cluster mesh from ``launch.mesh.make_cluster_mesh``),
+    everything inside a replica replicated.  For tensor-parallel replicas on
+    a 2-D mesh, compose with :func:`param_pspecs` via ``client_axis=axis``
+    instead — the training path's layout — so both sides agree.
+    """
+
+    def one(leaf):
+        nd = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        return P(axis, *([None] * (nd - 1)))
+
+    return jax.tree.map(one, stack)
 
 
 def batch_pspecs(cfg: ArchConfig, batch_shape: PyTree, ax: MeshAxes,

@@ -9,6 +9,8 @@ Checks:
   decode_sharded     — sequence-sharded LSE-merge decode == local decode
   lm_collective_mesh — LM round: shard_map collective on a client mesh ==
                        the single-device vmap emulation (auto param_specs)
+  continuous_mesh_serving — slot-pool decode with the replica stack sharded
+                       across a cluster mesh == the off-mesh vmap fallback
 """
 import os
 import sys
@@ -195,10 +197,69 @@ def check_lm_collective_mesh():
     print("lm_collective_mesh OK")
 
 
+def check_continuous_mesh_serving():
+    """Continuous serving with mesh-sharded replicas == the vmap fallback.
+
+    The stacked ``(D, ...)`` cluster replicas are device_put across a
+    4-device cluster mesh; slot admission, chunked decode, and harvest run
+    the same jitted programs as the off-mesh path, so every request's
+    greedy continuation must be bitwise identical.
+    """
+    import dataclasses
+    from repro.launch.mesh import make_cluster_mesh
+    from repro.models import CausalLM
+    from repro.models.config import ArchConfig
+    from repro.serving import ContinuousFederatedServer, Request
+
+    D = 4
+    cfg = ArchConfig(
+        name="spmd-serve", family="dense", num_layers=2, d_model=32, d_ff=64,
+        vocab_size=64, num_heads=2, num_kv_heads=1, head_dim=16,
+        dtype="float32", remat=False, attn_chunk=16, tie_embeddings=True,
+    )
+    model = CausalLM(cfg)
+    stack = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[model.init(jax.random.PRNGKey(s)) for s in range(D)],
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(3, 17))),
+            max_new_tokens=int(rng.integers(1, 9)),
+            eos_id=int(rng.integers(0, cfg.vocab_size)),
+            cluster_id=int(rng.integers(0, D)),
+        )
+        for i in range(12)
+    ]
+
+    def serve(mesh):
+        srv = ContinuousFederatedServer(
+            model, stack, mesh=mesh, max_batch=4, length_buckets=(8, 16),
+            gen_cap=8, chunk_steps=3,
+        )
+        batch = [dataclasses.replace(r, output=None) for r in reqs]
+        for r in batch:
+            srv.submit(r)
+        srv.run()
+        return batch
+
+    mesh = make_cluster_mesh(D)
+    assert mesh.devices.size == D
+    on = serve(mesh)
+    off = serve(None)
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(np.asarray(a.output),
+                                      np.asarray(b.output))
+    print("continuous_mesh_serving OK")
+
+
 if __name__ == "__main__":
     {
         "gossip_equivalence": check_gossip_equivalence,
         "tiny_dryrun": check_tiny_dryrun,
         "decode_sharded": check_decode_sharded,
         "lm_collective_mesh": check_lm_collective_mesh,
+        "continuous_mesh_serving": check_continuous_mesh_serving,
     }[sys.argv[1]]()

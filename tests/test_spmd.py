@@ -45,3 +45,9 @@ def test_sequence_sharded_decode_matches_local():
 def test_lm_collective_mesh_matches_emulation():
     """Federated-LM round under shard_map on a client mesh == vmap emulation."""
     run_check("lm_collective_mesh")
+
+
+@pytest.mark.slow
+def test_continuous_serving_mesh_matches_fallback():
+    """Slot-pool decode on mesh-sharded cluster replicas == vmap fallback."""
+    run_check("continuous_mesh_serving")
